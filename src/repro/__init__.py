@@ -1,0 +1,4 @@
+"""repro: Quantizable Transformers (NeurIPS 2023) as a multi-pod JAX
+framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Architecture config registry (assigned pool + paper's own models)."""
+from repro.configs.base import (
+    SHAPES,
+    ArchSpec,
+    ShapeSpec,
+    apply_method,
+    cache_specs,
+    get_arch,
+    input_specs,
+    list_archs,
+    to_bf16,
+)
+
+__all__ = [
+    "SHAPES", "ArchSpec", "ShapeSpec", "apply_method", "cache_specs",
+    "get_arch", "input_specs", "list_archs", "to_bf16",
+]

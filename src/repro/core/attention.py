@@ -1,0 +1,263 @@
+"""Multi-head attention with the paper's modifications, GQA, local windows,
+logit soft-capping and qk-norm — the core op the whole model zoo shares.
+
+Two execution paths:
+
+  * ``dense_attention``   — materializes the (Tq, Tk) probability matrix.
+    Reference semantics; used for short sequences, decode steps and as the
+    oracle for the Pallas kernels.
+  * ``chunked_attention`` — flash-attention-style blockwise streaming over
+    KV; O(T) memory. For the *clipped* softmax the affine stretch+clip is a
+    function of globally-normalized probabilities, so we run the classic
+    2-pass scheme: pass 1 accumulates the online (m, Z); pass 2 applies
+    stretch_and_clip per block and accumulates P·V. Vanilla softmax takes
+    the 1-pass online path. This is the XLA (non-Pallas) implementation the
+    dry-run lowers; `repro.kernels.flash_attention` is the TPU Pallas twin.
+
+Layout convention: q (B, Tq, Hq, Dh); k/v (B, Tk, Hkv, Dh) with
+Hq = G * Hkv (grouped-query attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax import (
+    ClippedSoftmaxConfig,
+    softcap,
+    softmax,
+    stretch_and_clip,
+)
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    causal: bool = True
+    window: Optional[int] = None            # local attention window (tokens back)
+    logit_softcap: Optional[float] = None   # gemma-2 style tanh cap
+    softmax: ClippedSoftmaxConfig = ClippedSoftmaxConfig()
+    chunk_size: int = 512                   # KV block for the chunked path
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+def make_attention_mask(
+    q_len: int,
+    kv_len: int,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    dtype=jnp.bool_,
+) -> Array:
+    """(q_len, kv_len) boolean mask, True = may attend.
+
+    ``q_offset`` positions the query block inside the full sequence — used
+    both by chunked attention and by decode (q_offset = cache position).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask.astype(dtype)
+
+
+def _expand_kv(k: Array, group: int) -> Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv, G, D) broadcast view for GQA einsums."""
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (*k.shape[:3], group, k.shape[-1])
+    )
+
+
+def attention_logits(q: Array, k: Array, cfg: AttentionConfig) -> Array:
+    """(B, Tq, Hkv, G, Tk) scaled and (optionally) soft-capped logits."""
+    b, tq, hq, d = q.shape
+    g = cfg.group_size
+    qg = q.reshape(b, tq, cfg.n_kv_heads, g, d)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", (qg * scale).astype(jnp.float32), k.astype(jnp.float32))
+    return softcap(logits, cfg.logit_softcap)
+
+
+def dense_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: AttentionConfig,
+    mask: Optional[Array] = None,
+    q_offset: int = 0,
+    gate_pi: Optional[Array] = None,
+) -> Array:
+    """Reference attention. Returns (B, Tq, Hq, Dh).
+
+    ``mask``: optional (Tq, Tk) or (B, 1, Tq, Tk)-broadcastable boolean.
+    ``gate_pi``: optional (B, Tq, Hq) gating probabilities (paper Eq. 5).
+    """
+    b, tq, hq, d = q.shape
+    tk = k.shape[1]
+    logits = attention_logits(q, k, cfg)               # (B, Hkv, G, Tq, Tk)
+    if mask is None:
+        mask = make_attention_mask(tq, tk, cfg.causal, cfg.window, q_offset)
+    mask_b = jnp.broadcast_to(mask.astype(jnp.bool_), logits.shape) if mask.ndim == 2 else mask
+
+    sm = cfg.softmax
+    if sm.is_vanilla:
+        probs = softmax(logits, axis=-1, where=mask_b)
+    else:
+        gamma = sm.resolve_gamma(tk)
+        probs = softmax(logits, axis=-1, where=mask_b)
+        probs = stretch_and_clip(probs, gamma, sm.zeta)
+        # clipped probabilities of masked entries are clip(gamma,0,1)=0 since
+        # softmax emitted 0 there and gamma <= 0; nothing extra needed.
+    probs = probs.astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = out.reshape(b, tq, hq, d)
+    if gate_pi is not None:
+        out = out * gate_pi[..., None].astype(out.dtype)
+    return out
+
+
+def _online_pass(q, k, v, cfg: AttentionConfig, q_offset: int) -> Tuple[Array, Array, Array]:
+    """1-pass online softmax over KV chunks. Returns (acc, m, z) where
+    acc = sum exp(s - m) v, per query. Shapes:
+      acc (B, Hkv, G, Tq, D); m, z (B, Hkv, G, Tq)."""
+    b, tq, hq, d = q.shape
+    g = cfg.group_size
+    hkv = cfg.n_kv_heads
+    c = cfg.chunk_size
+    tk = k.shape[1]
+    n_chunks = (tk + c - 1) // c
+    pad = n_chunks * c - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, c, hkv, d)
+    vc = v.reshape(b, n_chunks, c, hkv, d)
+    qg = (q * d ** -0.5).reshape(b, tq, hkv, g, d).astype(jnp.float32)
+
+    def body(carry, blk):
+        acc, m, z = carry
+        kb, vb, idx = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        s = softcap(s, cfg.logit_softcap)
+        k_pos = idx * c + jnp.arange(c)[None, :]
+        q_pos = jnp.arange(tq)[:, None] + q_offset
+        mask = k_pos < tk  # padding
+        if cfg.causal:
+            mask &= k_pos <= q_pos
+        if cfg.window is not None:
+            mask &= k_pos > q_pos - cfg.window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        z_new = z * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32)
+        )
+        return (acc_new, m_new, z_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, tq), NEG_INF, jnp.float32)
+    z0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (acc, m, z), _ = jax.lax.scan(
+        body, (acc0, m0, z0), (kc_t, vc_t, jnp.arange(n_chunks))
+    )
+    return acc, m, z
+
+
+def _clipped_second_pass(q, k, v, m, z, cfg: AttentionConfig, q_offset: int) -> Array:
+    """Pass 2 for clipped softmax: accumulate clip((z-g)·p + g)·V blockwise."""
+    b, tq, hq, d = q.shape
+    g = cfg.group_size
+    hkv = cfg.n_kv_heads
+    c = cfg.chunk_size
+    tk = k.shape[1]
+    gamma = cfg.softmax.resolve_gamma(tk)
+    zeta = cfg.softmax.zeta
+    n_chunks = (tk + c - 1) // c
+    pad = n_chunks * c - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, c, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, c, hkv, d), 1, 0)
+    qg = (q * d ** -0.5).reshape(b, tq, hkv, g, d).astype(jnp.float32)
+    z_safe = jnp.maximum(z, jnp.finfo(jnp.float32).tiny)
+
+    def body(acc, blk):
+        kb, vb, idx = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        s = softcap(s, cfg.logit_softcap)
+        k_pos = idx * c + jnp.arange(c)[None, :]
+        q_pos = jnp.arange(tq)[:, None] + q_offset
+        mask = k_pos < tk
+        if cfg.causal:
+            mask &= k_pos <= q_pos
+        if cfg.window is not None:
+            mask &= k_pos > q_pos - cfg.window
+        p = jnp.exp(s - m[..., None]) / z_safe[..., None]
+        p = stretch_and_clip(p, gamma, zeta)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        return acc + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32)), None
+
+    acc0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (kc, vc, jnp.arange(n_chunks)))
+    return acc
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: AttentionConfig,
+    q_offset: int = 0,
+    gate_pi: Optional[Array] = None,
+) -> Array:
+    """Flash-style O(T)-memory attention with vanilla OR clipped softmax."""
+    b, tq, hq, d = q.shape
+    acc, m, z = _online_pass(q, k, v, cfg, q_offset)
+    if cfg.softmax.is_vanilla:
+        out = acc / jnp.maximum(z, jnp.finfo(jnp.float32).tiny)[..., None]
+    else:
+        out = _clipped_second_pass(q, k, v, m, z, cfg, q_offset)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, tq, hq, d).astype(v.dtype)
+    if gate_pi is not None:
+        out = out * gate_pi[..., None].astype(out.dtype)
+    return out
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: AttentionConfig,
+    q_offset: int = 0,
+    gate_pi: Optional[Array] = None,
+    force_dense: bool = False,
+) -> Array:
+    """Dispatcher: dense for small problems / decode, chunked for long T."""
+    tq, tk = q.shape[1], k.shape[1]
+    if force_dense or (tq * tk <= 4096 * 4096 and tq > 1) or tq == 1 and tk <= 8192:
+        if tq == 1 or tq * tk <= 2048 * 2048:
+            return dense_attention(q, k, v, cfg, q_offset=q_offset, gate_pi=gate_pi)
+    return chunked_attention(q, k, v, cfg, q_offset=q_offset, gate_pi=gate_pi)

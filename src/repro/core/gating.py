@@ -1,0 +1,119 @@
+"""Gating modules for gated attention (paper Section 4.2, Appendix B.1).
+
+Gated_attention(x) = sigmoid(G(x)) ⊙ softmax(QK^T/sqrt(d)) V        (Eq. 5)
+
+G is defined per head: G_i : R^{d_head} -> R, shared across token positions,
+NOT shared across heads. Three parameterizations from Table 4:
+
+  - "linear":           n_heads × Linear(d_head -> 1)
+  - "mlp":              n_heads × MLP(d_head -> n_hid -> 1), ReLU
+  - "all_heads_linear": Linear(d_model -> n_heads)  (mixes heads)
+
+The bias is initialized to ``b_init`` so the initial gate probability is
+pi_init = sigmoid(b_init) (paper Sec. 5.3; reasonable pi_init ~ [0.25, 0.9]
+for BERT, [0.1, 0.5] for ViT).
+
+For the fine-tuning recipe (paper App. B.6) ``output_scale=2.0`` with
+b_init=0 makes the expected gate output 1 at init, approximating vanilla
+attention on an already-trained network.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GateConfig:
+    kind: str = "linear"          # "linear" | "mlp" | "all_heads_linear" | "none"
+    n_hid: int = 4                # hidden width for the "mlp" kind
+    b_init: float = 0.0           # gate bias init; pi_init = sigmoid(b_init)
+    output_scale: float = 1.0     # 2.0 for the fine-tuning recipe (App. B.6)
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    @staticmethod
+    def from_pi_init(pi_init: float, kind: str = "linear", **kw) -> "GateConfig":
+        pi = min(max(pi_init, 1e-6), 1.0 - 1e-6)
+        return GateConfig(kind=kind, b_init=math.log(pi / (1.0 - pi)), **kw)
+
+
+def _he_normal(key: Array, shape, fan_in: int, dtype) -> Array:
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def init_gate(
+    key: Array,
+    cfg: GateConfig,
+    n_heads: int,
+    d_head: int,
+    d_model: int,
+    dtype: jnp.dtype = jnp.float32,
+) -> Params:
+    """Parameter pytree for the gating module. Empty dict if disabled."""
+    if not cfg.enabled:
+        return {}
+    b = jnp.full((n_heads,), cfg.b_init, dtype=dtype)
+    if cfg.kind == "linear":
+        w = _he_normal(key, (n_heads, d_head), d_head, dtype)
+        return {"w": w, "b": b}
+    if cfg.kind == "mlp":
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": _he_normal(k1, (n_heads, d_head, cfg.n_hid), d_head, dtype),
+            "b1": jnp.zeros((n_heads, cfg.n_hid), dtype=dtype),
+            "w2": _he_normal(k2, (n_heads, cfg.n_hid), cfg.n_hid, dtype),
+            "b2": b,
+        }
+    if cfg.kind == "all_heads_linear":
+        w = _he_normal(key, (d_model, n_heads), d_model, dtype)
+        return {"w": w, "b": b}
+    raise ValueError(f"unknown gate kind: {cfg.kind!r}")
+
+
+def gate_logits(params: Params, cfg: GateConfig, x_heads: Array, x_model: Array) -> Array:
+    """Raw gate logits G(x), shape (..., T, n_heads).
+
+    ``x_heads``: (..., T, n_heads, d_head) — the per-head view of the input.
+    ``x_model``: (..., T, d_model)        — the flat view (for all_heads_linear).
+    """
+    if cfg.kind == "linear":
+        return jnp.einsum("...thd,hd->...th", x_heads, params["w"]) + params["b"]
+    if cfg.kind == "mlp":
+        h = jnp.einsum("...thd,hdn->...thn", x_heads, params["w1"]) + params["b1"]
+        h = jax.nn.relu(h)
+        return jnp.einsum("...thn,hn->...th", h, params["w2"]) + params["b2"]
+    if cfg.kind == "all_heads_linear":
+        return jnp.einsum("...td,dh->...th", x_model, params["w"]) + params["b"]
+    raise ValueError(f"unknown gate kind: {cfg.kind!r}")
+
+
+def gate_probs(params: Params, cfg: GateConfig, x_heads: Array, x_model: Array) -> Array:
+    """pi = output_scale * sigmoid(G(x)), shape (..., T, n_heads)."""
+    pi = jax.nn.sigmoid(gate_logits(params, cfg, x_heads, x_model))
+    if cfg.output_scale != 1.0:
+        pi = cfg.output_scale * pi
+    return pi
+
+
+def gate_param_count(cfg: GateConfig, n_heads: int, d_head: int, d_model: int) -> int:
+    """Memory overhead accounting (paper Table 4)."""
+    if not cfg.enabled:
+        return 0
+    if cfg.kind == "linear":
+        return n_heads * (d_head + 1)
+    if cfg.kind == "mlp":
+        return n_heads * (cfg.n_hid * (d_head + 2) + 1)
+    if cfg.kind == "all_heads_linear":
+        return n_heads * (d_model + 1)
+    raise ValueError(cfg.kind)

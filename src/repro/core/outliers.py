@@ -1,0 +1,98 @@
+"""Outlier telemetry (paper Section 3 / Section 5 metrics).
+
+Metrics the paper uses to quantify outliers, all computed on the *output of
+an attention layer* (or any activation tensor):
+
+  - max infinity norm  ``max ||x||_inf``  averaged across a validation set,
+  - kurtosis of x averaged across layers,
+  - 6-sigma outlier counts per hidden dimension / token position (Fig. 1),
+
+These correlate with quantizability (Bondarenko et al. 2021; Chmiel et al.
+2020). The training loop logs them every eval to reproduce the paper's
+outlier-growth curves.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def infinity_norm(x: Array) -> Array:
+    """max |x| over everything except a leading batch axis is NOT taken:
+    the paper's 'maximum infinity norm' is the max abs value of the tensor."""
+    return jnp.max(jnp.abs(x))
+
+
+def kurtosis(x: Array, axis=None, eps: float = 1e-12) -> Array:
+    """Pearson kurtosis E[(x-mu)^4] / sigma^4 (not excess)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    d = x - mu
+    var = jnp.mean(d * d, axis=axis, keepdims=True)
+    m4 = jnp.mean(d ** 4, axis=axis, keepdims=True)
+    k = m4 / jnp.maximum(var * var, eps)
+    return jnp.squeeze(k) if axis is None else jnp.squeeze(k, axis=axis)
+
+
+def outlier_mask(x: Array, n_sigma: float = 6.0) -> Array:
+    """Boolean mask of values exceeding n_sigma std-devs from the tensor mean
+    (the paper follows Bondarenko et al. [4] with n_sigma = 6)."""
+    mu = jnp.mean(x)
+    sigma = jnp.std(x)
+    return jnp.abs(x - mu) > n_sigma * sigma
+
+
+def outlier_counts_by_dim(x: Array, n_sigma: float = 6.0) -> Array:
+    """Histogram of outlier counts per hidden dimension (paper Fig. 1, green).
+
+    x: (..., T, d_model) -> (d_model,) int32 counts.
+    """
+    mask = outlier_mask(x, n_sigma)
+    return jnp.sum(mask.reshape(-1, x.shape[-1]), axis=0).astype(jnp.int32)
+
+
+def outlier_counts_by_token(x: Array, n_sigma: float = 6.0) -> Array:
+    """Histogram of outlier counts per token position (paper Fig. 1, blue).
+
+    x: (B, T, d_model) -> (T,) int32 counts.
+    """
+    mask = outlier_mask(x, n_sigma)
+    return jnp.sum(mask, axis=(0, 2)).astype(jnp.int32)
+
+
+class OutlierStats:
+    """Running aggregate across batches / layers, mirroring the paper's
+    reporting: max inf-norm averaged across the validation set, kurtosis
+    averaged across layers."""
+
+    def __init__(self) -> None:
+        self._inf_norms: List[float] = []      # one per batch (max over layers)
+        self._kurtoses: List[float] = []       # one per (batch, layer)
+
+    def update(self, layer_outputs: Sequence[Array]) -> None:
+        per_layer_inf = [float(infinity_norm(y)) for y in layer_outputs]
+        self._inf_norms.append(max(per_layer_inf))
+        self._kurtoses.extend(float(kurtosis(y)) for y in layer_outputs)
+
+    def summary(self) -> Dict[str, float]:
+        if not self._inf_norms:
+            return {"max_inf_norm": 0.0, "avg_kurtosis": 0.0}
+        return {
+            "max_inf_norm": sum(self._inf_norms) / len(self._inf_norms),
+            "avg_kurtosis": sum(self._kurtoses) / max(len(self._kurtoses), 1),
+        }
+
+
+def collect_activation_stats(activations: Mapping[str, Array]) -> Dict[str, Dict[str, float]]:
+    """One-shot metrics for a dict of named activations (telemetry hook)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for name, act in activations.items():
+        out[name] = {
+            "inf_norm": float(infinity_norm(act)),
+            "kurtosis": float(kurtosis(act)),
+            "outliers_6sigma": int(jnp.sum(outlier_mask(act))),
+        }
+    return out

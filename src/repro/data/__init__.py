@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
+
+__all__ = ["SyntheticLM", "SyntheticLMConfig"]

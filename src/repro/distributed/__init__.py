@@ -1,0 +1,14 @@
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs_tree,
+    maybe_constrain,
+    param_rules,
+    spec_for_path,
+    tree_param_specs,
+    tree_shardings,
+)
+
+__all__ = [
+    "batch_specs", "cache_specs_tree", "maybe_constrain", "param_rules",
+    "spec_for_path", "tree_param_specs", "tree_shardings",
+]

@@ -1,0 +1,231 @@
+"""Rule-based parameter/activation sharding (DP / FSDP / TP / EP / SP).
+
+Mesh axes:
+  * ``pod``   — cross-pod data parallelism (gradient all-reduce over DCI)
+  * ``data``  — intra-pod data parallel + FSDP (ZeRO-3-style weight shard)
+  * ``model`` — tensor/expert parallel
+
+Rules are (regex over '/'-joined param path) -> PartitionSpec of the
+UNSTACKED tensor; scanned layer groups ("groups/...") automatically get a
+leading ``None`` for the stacking axis. First match wins.
+
+Profiles (select per run — and per §Perf hillclimb):
+  * ``tp_fsdp``  — default training profile: weights sharded over
+    (data, model); optimizer state follows params, so ZeRO-3 memory.
+  * ``tp_only``  — weights sharded over model only, replicated over data —
+    the serving profile (no per-step weight all-gather).
+  * ``replicated`` — pure DP (small models).
+
+Divisibility notes (why rules look like they do): every assigned arch has
+d_model, d_ff, n_heads*d_head and d_head divisible by 16; vocab sizes,
+expert counts (60) and kv-head counts (8, 1) are NOT uniformly divisible,
+so those dims are never sharded as jit *arguments* (XLA rejects uneven arg
+sharding); experts therefore shard internally over (data, model) on their
+(d_model, d_ff) dims — "expert-TP". KV caches shard batch over data and
+d_head (always /16) over model.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.module import flatten_params
+
+Rules = List[Tuple[str, P]]
+
+
+def _dp(mesh: Mesh) -> Any:
+    """The composite data-parallel axis: ('pod','data') on multi-pod."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def maybe_constrain(x, *logical: Optional[str]):
+    """``with_sharding_constraint`` that resolves logical axes ('dp', 'tp')
+    against whatever mesh is active at trace time, and silently no-ops when
+    there is none (single-device tests). Layers use this to pin activation
+    shardings (e.g. MoE dispatch group axes) without knowing mesh names."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return x
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+
+    def resolve(ax):
+        if isinstance(ax, (tuple, list)):
+            flat = []
+            for a in ax:
+                r = resolve(a)
+                if isinstance(r, tuple):
+                    flat.extend(r)
+                elif r is not None:
+                    flat.append(r)
+            return tuple(flat) if flat else None
+        if ax == "dp":
+            got = tuple(a for a in ("pod", "data") if a in names)
+            return got if got else None
+        if ax == "tp":
+            return "model" if "model" in names else None
+        return ax if ax in names else None
+
+    spec = P(*(resolve(a) for a in logical))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_rules(profile: str, mesh: Mesh) -> Rules:
+    # "tp_seq" shares the tp_only weight layout; it differs only in
+    # activation sharding (sequence/context parallelism, set by the caller)
+    fs = "data" if profile == "tp_fsdp" else None     # FSDP axis (or not)
+    mdl = "model" if profile != "replicated" else None
+    if profile == "replicated":
+        return [(r".*", P())]
+    return [
+        # embeddings: vocab (padded to 128-multiples) shards over model, so
+        # the LM head contraction keeps logits vocab-sharded instead of
+        # all-reducing a (B,T,vocab) f32 buffer
+        (r".*pos_embed/table$", P(None, mdl)),
+        (r".*(^|/)embed/table$", P(mdl, None)),
+        (r".*frontend_proj/w$", P(None, mdl)),
+        (r".*lm_head/w$", P(fs, mdl)),
+        # attention projections
+        (r".*/(q|k|v)/w$", P(fs, mdl)),
+        (r".*/o/w$", P(mdl, fs)),
+        (r".*/(qnorm|knorm)/scale$", P()),
+        # attention gating module (paper) — tiny, replicate
+        (r".*/gate/(w|b|w1|b1|w2|b2)$", P()),
+        # dense MLP
+        (r".*/mlp/(up|gate)/w$", P(fs, mdl)),
+        (r".*/mlp/down/w$", P(mdl, fs)),
+        # MoE: expert-TP (expert dim uneven across archs -> unsharded);
+        # shared experts are plain MLPs
+        (r".*/moe/router/w$", P()),
+        (r".*/moe/w_(gate|up)$", P(None, fs, mdl)),
+        (r".*/moe/w_down$", P(None, mdl, fs)),
+        (r".*/moe/shared/(up|gate)/w$", P(fs, mdl)),
+        (r".*/moe/shared/down/w$", P(mdl, fs)),
+        # griffin / RG-LRU
+        (r".*/griffin/(in_x|in_gate)/w$", P(fs, mdl)),
+        (r".*/griffin/out/w$", P(mdl, fs)),
+        (r".*/rglru/(w_a|w_x)/w$", P(fs, mdl)),
+        (r".*/rglru/lambda$", P(mdl)),
+        (r".*/griffin/conv/w$", P(None, mdl)),
+        (r".*/griffin/conv/b$", P(mdl)),
+        # xLSTM
+        (r".*/blk/up/w$", P(fs, mdl)),
+        (r".*/blk/(q|k|v)/w$", P(fs, mdl)),
+        (r".*/blk/down/w$", P(mdl, fs)),
+        (r".*/blk/ifgate/w$", P(mdl, None)),
+        (r".*/blk/conv/w$", P(None, mdl)),
+        (r".*/blk/conv/b$", P(mdl)),
+        (r".*/blk/(zifo|ff_up|ff_gate)/w$", P(fs, mdl)),
+        (r".*/blk/ff_down/w$", P(mdl, fs)),
+        (r".*/blk/(rz|ri|rf|ro)$", P()),
+        # biases / norm scales / everything small: replicate
+        (r".*", P()),
+    ]
+
+
+def spec_for_path(path: str, rules: Rules, stacked: bool) -> P:
+    for pat, spec in rules:
+        if re.match(pat, path):
+            if stacked:
+                return P(None, *spec)
+            return spec
+    return P()
+
+
+def tree_param_specs(tree: Any, profile: str, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``tree`` (params or a TrainState whose
+    leaves' paths end with param paths)."""
+    rules = param_rules(profile, mesh)
+    leaves = list(flatten_params(tree))
+    specs = []
+    for path, leaf in leaves:
+        stacked = "/groups/" in f"/{path}" or path.startswith("groups/")
+        spec = spec_for_path(path, rules, stacked)
+        # rank guard: never emit a spec longer than the tensor rank
+        if len(spec) > leaf.ndim:
+            spec = P(*tuple(spec)[: leaf.ndim])
+        specs.append(spec)
+    treedef = jax.tree_util.tree_structure(tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree: Any, profile: str, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_param_specs(tree, profile, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# Activation / input shardings
+# --------------------------------------------------------------------------
+def batch_specs(batch: Any, mesh: Mesh, shard_seq: bool = False,
+                seq_axis: Optional[str] = None) -> Any:
+    """tokens/labels (B,T): batch over (pod,data). ``shard_seq`` moves the
+    sequence dim onto ``seq_axis`` ("data" for B=1 long-context decode,
+    "model" for context-parallel prefill); batch stays on the dp axes when
+    it still divides."""
+    dp = _dp(mesh)
+    n_dp = 1
+    for ax in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[ax]
+
+    def one(leaf):
+        if leaf.ndim >= 2 and shard_seq:
+            b_ax = dp if leaf.shape[0] % n_dp == 0 else None
+            return P(b_ax, seq_axis or "data", *([None] * (leaf.ndim - 2)))
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs_tree(cache_tpl: Any, mesh: Mesh, cfg, batch: int) -> Any:
+    """Decode-cache shardings. KV tensors (B, S, Hkv, Dh): batch over the
+    data axes when divisible, sequence over 'data' otherwise (SP for the
+    B=1 long-context cell); d_head always shards over 'model' (every arch's
+    d_head is a multiple of 16). Recurrent states shard their feature dim
+    over 'model'."""
+    dp = _dp(mesh)
+    n_dp = 1
+    for ax in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[ax]
+
+    shard_batch = batch % n_dp == 0
+    b_ax = dp if shard_batch else None
+
+    def one(path: str, leaf) -> P:
+        stacked = path.startswith("groups/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        ndim = len(shape)
+        if path.endswith("pos_ids"):
+            spec: Tuple = ()
+        elif ndim == 4 and (path.endswith("/k") or path.endswith("/v")):
+            # KV cache (B, S, Hkv, Dh): SP over seq when batch unshardable
+            s_ax = None if shard_batch else "data"
+            spec = (b_ax, s_ax, None, "model")
+        elif ndim >= 2 and shape[0] == batch:
+            # recurrent state (B, ..., feature)
+            feat = shape[-1]
+            f_ax = "model" if feat % mesh.shape["model"] == 0 else None
+            spec = (b_ax,) + (None,) * (ndim - 2) + (f_ax,)
+        elif ndim == 1 and shape[0] == batch:
+            spec = (b_ax,)
+        else:
+            spec = ()
+        if stacked:
+            spec = (None,) + tuple(spec)
+        return P(*spec)
+
+    leaves = list(flatten_params(cache_tpl))
+    specs = [one(path, leaf) for path, leaf in leaves]
+    treedef = jax.tree_util.tree_structure(cache_tpl)
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see ref.py)."""
+from repro.kernels.ops import (
+    default_interpret,
+    fake_quant_op,
+    linear_w8a8,
+    mha_flash,
+    on_tpu,
+    quantize_weights_int8,
+    rglru_op,
+)
+
+__all__ = [
+    "default_interpret", "fake_quant_op", "linear_w8a8", "mha_flash",
+    "on_tpu", "quantize_weights_int8", "rglru_op",
+]

@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, production train CLI.
+
+NOTE: ``repro.launch.dryrun`` must be imported FIRST in a fresh process
+(it sets XLA_FLAGS for 512 host devices before jax initializes).
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,3 @@
+from repro.models.transformer import ModelConfig, init_cache, model_apply, model_init
+
+__all__ = ["ModelConfig", "init_cache", "model_apply", "model_init"]

@@ -1,0 +1,55 @@
+"""Feed-forward blocks: classic GELU MLP (BERT/OPT/ViT/hubert) and
+SwiGLU (llama/qwen/gemma/deepseek family)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear_apply, linear_init
+from repro.nn.module import Array, Params, split_keys
+from repro.quant.qconfig import NO_QUANT, QuantContext
+
+
+def mlp_init(key: Array, d_model: int, d_ff: int, kind: str = "gelu",
+             dtype=jnp.float32) -> Params:
+    if kind in ("gelu", "gelu_tanh", "relu"):
+        k1, k2 = split_keys(key, 2)
+        return {
+            "up": linear_init(k1, d_model, d_ff, dtype=dtype),
+            "down": linear_init(k2, d_ff, d_model, dtype=dtype),
+        }
+    if kind in ("swiglu", "geglu"):
+        k1, k2, k3 = split_keys(key, 3)
+        return {
+            "gate": linear_init(k1, d_model, d_ff, bias=False, dtype=dtype),
+            "up": linear_init(k2, d_model, d_ff, bias=False, dtype=dtype),
+            "down": linear_init(k3, d_ff, d_model, bias=False, dtype=dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def _act(kind: str, x: Array) -> Array:
+    if kind in ("gelu", "geglu"):
+        return jax.nn.gelu(x, approximate=False)
+    if kind == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "swiglu":
+        return jax.nn.silu(x)
+    raise ValueError(kind)
+
+
+def mlp_apply(p: Params, x: Array, kind: str, ctx: QuantContext = NO_QUANT,
+              name: str = "mlp") -> Array:
+    if kind in ("gelu", "gelu_tanh", "relu"):
+        h = _act(kind, linear_apply(p["up"], x, ctx, name + "/up"))
+        h = ctx.act(name + "/act.out", h)
+        return linear_apply(p["down"], h, ctx, name + "/down")
+    # gated variants
+    g = _act(kind, linear_apply(p["gate"], x, ctx, name + "/gate"))
+    u = linear_apply(p["up"], x, ctx, name + "/up")
+    h = ctx.act(name + "/act.out", g * u)
+    return linear_apply(p["down"], h, ctx, name + "/down")

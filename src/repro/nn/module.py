@@ -1,0 +1,100 @@
+"""Minimal functional module system.
+
+No flax/optax in this environment, so layers are plain functions:
+
+    init(key, ...) -> params (nested dict pytree)
+    apply(params, x, ...) -> y
+
+Param trees are nested dicts keyed by strings; ``flatten_params`` produces
+'/'-joined paths that feed the regex sharding-rule engine in
+``repro.distributed.sharding`` (the same role flax param names play in
+MaxText).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy: params stored in ``param_dtype``, math in
+    ``compute_dtype`` (bf16 on TPU), softmax/norm accumulation in f32."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @staticmethod
+    def bf16() -> "DTypePolicy":
+        return DTypePolicy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+    @staticmethod
+    def bf16_params_f32() -> "DTypePolicy":
+        # bf16 weights, f32 master math — used for small CPU smoke runs
+        return DTypePolicy(param_dtype=jnp.float32, compute_dtype=jnp.bfloat16)
+
+
+F32 = DTypePolicy()
+
+
+def normal_init(key: Array, shape: Tuple[int, ...], std: float, dtype) -> Array:
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def truncated_normal_init(key: Array, shape, std: float, dtype) -> Array:
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def fan_in_init(key: Array, shape, dtype) -> Array:
+    """LeCun-normal on the second-to-last axis product (matmul fan-in)."""
+    fan_in = shape[0] if len(shape) == 2 else int(jnp.prod(jnp.array(shape[:-1])))
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def split_keys(key: Array, n: int) -> List[Array]:
+    return list(jax.random.split(key, n))
+
+
+def flatten_params(params: Params, prefix: str = "") -> Iterator[Tuple[str, Array]]:
+    """Yield ('/'-joined path, leaf) pairs in deterministic order."""
+    if isinstance(params, dict):
+        for k in sorted(params.keys()):
+            yield from flatten_params(params[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            yield from flatten_params(v, f"{prefix}/{i}" if prefix else str(i))
+    elif params is None:
+        return
+    else:
+        yield prefix, params
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for _, p in flatten_params(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(p.size) * p.dtype.itemsize for _, p in flatten_params(params))
+
+
+def tree_stack(trees: List[Params]) -> Params:
+    """Stack a list of identical pytrees along a new leading axis — used to
+    build scanned layer groups."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_slice(tree: Params, i) -> Params:
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def cast_tree(tree: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts feed-forward (granite-moe, qwen2-moe).
+
+Router: linear -> softmax -> top-k, probabilities renormalized over the
+selected experts. Optional shared experts (qwen2-moe: 4 shared + 60 routed)
+are always-on SwiGLU branches added to the routed output.
+
+Two execution paths:
+
+  * ``dense``    — every expert computes every token, combined with the
+    (sparse) routing weights. Exact, simple, O(E/k) FLOPs overhead — the
+    oracle for tests and the small-smoke path.
+  * ``dispatch`` — GShard-style capacity-based dispatch: tokens are grouped
+    (``group_size``), each group builds a (G, E, C) one-hot dispatch tensor,
+    experts run on their (C)-token buffers, and a combine einsum scatters
+    results back. Tokens over capacity are dropped (residual passes them
+    through untouched — exactly the no-update the paper studies). This is
+    the path the dry-run lowers at scale; experts shard over the "model"
+    mesh axis (EP).
+
+Aux losses: load-balancing loss (Switch-style, mean over groups of
+E * dot(frac_tokens, frac_prob)) and router z-loss, both returned for the
+train step to weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear_init
+from repro.nn.module import Array, Params, split_keys
+from repro.quant.qconfig import NO_QUANT, QuantContext
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    n_shared_experts: int = 0      # qwen2-moe shared experts
+    shared_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    group_size: int = 4096         # tokens per dispatch group
+    mlp_kind: str = "swiglu"
+    exec_mode: str = "dispatch"    # "dense" | "dispatch"
+
+    @property
+    def shared_ff(self) -> int:
+        return self.shared_d_ff if self.shared_d_ff is not None else self.d_ff * self.n_shared_experts
+
+
+def moe_init(key: Array, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, ke, ks = split_keys(key, 3)
+    std = 1.0 / (d_model ** 0.5)
+    e, f = cfg.n_experts, cfg.d_ff
+    k1, k2, k3 = split_keys(ke, 3)
+    p: Params = {
+        "router": linear_init(kr, d_model, e, bias=False, dtype=jnp.float32),
+        # stacked expert weights: (E, d_model, d_ff) / (E, d_ff, d_model)
+        "w_gate": (std * jax.random.normal(k1, (e, d_model, f))).astype(dtype),
+        "w_up": (std * jax.random.normal(k2, (e, d_model, f))).astype(dtype),
+        "w_down": ((1.0 / f ** 0.5) * jax.random.normal(k3, (e, f, d_model))).astype(dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        from repro.nn.mlp import mlp_init
+        p["shared"] = mlp_init(ks, d_model, cfg.shared_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def _router(p: Params, x2d: Array, cfg: MoEConfig, ctx: QuantContext, name: str
+            ) -> Tuple[Array, Array, Dict[str, Array]]:
+    """Returns (top-k probs (N,k), top-k idx (N,k), aux losses)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    # Switch load-balance loss + z-loss
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, cfg.n_experts), axis=1), axis=0
+    )                                                              # (E,)
+    aux = {
+        "load_balance": cfg.n_experts * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return top_p, top_i, aux
+
+
+def _expert_ffn(p: Params, xb: Array, cfg: MoEConfig) -> Array:
+    """Apply every expert to its buffer. xb: (E, C, d_model)."""
+    g = jnp.einsum("ecd,edf->ecf", xb, p["w_gate"].astype(xb.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, p["w_up"].astype(xb.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(xb.dtype))
+
+
+def _moe_dense(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
+    """Reference: all experts on all tokens, sparse combine."""
+    g = jnp.einsum("nd,edf->nef", x2d, p["w_gate"].astype(x2d.dtype))
+    u = jnp.einsum("nd,edf->nef", x2d, p["w_up"].astype(x2d.dtype))
+    h = jax.nn.silu(g) * u
+    y_all = jnp.einsum("nef,efd->ned", h, p["w_down"].astype(x2d.dtype))  # (N,E,D)
+    combine = jnp.zeros((x2d.shape[0], cfg.n_experts), x2d.dtype)
+    combine = jnp.sum(
+        jax.nn.one_hot(top_i, cfg.n_experts, dtype=x2d.dtype) * top_p[..., None].astype(x2d.dtype),
+        axis=1,
+    )
+    return jnp.einsum("ned,ne->nd", y_all, combine)
+
+
+def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
+    """Capacity-based dispatch via scatter/gather (dropless-style buffers).
+
+    Per group of ``group_size`` tokens: each (token, slot) claims a position
+    in its expert's capacity-C buffer (slot-major priority, overflow
+    dropped); tokens are scattered into (E*C, D) buffers, experts run
+    batched on (E, C, D), and a weighted gather combines. No (G, E, C)
+    one-hot tensors are materialized — peak extra memory is the (E, C, D)
+    buffer itself, and FLOPs overhead over the pure expert matmuls is ~0
+    (vs 60-100%% for the classic GShard einsum dispatch; see EXPERIMENTS.md
+    §Perf for the measured delta)."""
+    n, d = x2d.shape
+    gsz = min(cfg.group_size, n)
+    n_groups = (n + gsz - 1) // gsz
+    pad = n_groups * gsz - n
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+        top_p = jnp.pad(top_p, ((0, pad), (0, 0)))
+        # padded tokens: keep indices valid; their combine weight is 0
+        top_i = jnp.pad(top_i, ((0, pad), (0, 0)))
+        top_p = top_p * (jnp.arange(n_groups * gsz) < n)[:, None]
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * k * gsz / e), 4)
+    cap = (cap + 7) // 8 * 8   # MXU-friendly
+
+    from repro.distributed.sharding import maybe_constrain
+
+    # Shard the GROUP axis over the whole mesh when it divides evenly
+    # (§Perf iteration 3): every device owns whole groups, expert weights
+    # are gathered (they are small: E*3*d*f), and the d_ff-TP partial-sum
+    # all-reduces of (E, C, d) buffers — the dominant MoE collective —
+    # vanish. Equivalent semantics to more, smaller GShard groups.
+    group_axes: tuple = ("dp",)
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            total = 1
+            for n in am.axis_names:
+                total *= am.shape[n]
+            if n_groups % max(total, 1) == 0 and total > 1:
+                group_axes = ("dp", "tp")
+    except Exception:  # noqa: BLE001
+        pass
+
+    xg = maybe_constrain(x2d.reshape(n_groups, gsz, d), group_axes, None, None)
+    pg = maybe_constrain(top_p.reshape(n_groups, gsz, k), group_axes, None, None)
+    ig = maybe_constrain(top_i.reshape(n_groups, gsz, k), group_axes, None, None)
+
+    # expert weights enter the dispatch region gathered over the FSDP axis
+    # (classic ZeRO-3: gather weights once per layer, never the token
+    # buffers). With whole-mesh group sharding the weights are fully
+    # replicated inside the region; otherwise d_ff stays tensor-parallel.
+    w_tp = None if "tp" in group_axes else "tp"
+    w_gate = maybe_constrain(p["w_gate"], None, None, w_tp)
+    w_up = maybe_constrain(p["w_up"], None, None, w_tp)
+    w_down = maybe_constrain(p["w_down"], None, w_tp, None)
+
+    def per_group(xs, ps, ix):
+        # position of each (slot, token) in its expert buffer, slot-major
+        flat_e = ix.T.reshape(k * gsz)                               # (kG,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)        # (kG,E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)      # (kG,)
+        flat_idx = flat_e * cap + pos
+        flat_idx = jnp.where(pos < cap, flat_idx, e * cap)          # OOB -> drop
+        # scatter tokens into expert buffers (device-local: the group axis
+        # is vmapped with spmd_axis_name=dp, so these constraints pin every
+        # intermediate to "this group's shard")
+        x_rep = jnp.tile(xs, (k, 1))                                 # (kG,D)
+        xb = jnp.zeros((e * cap, d), xs.dtype).at[flat_idx].set(
+            x_rep, mode="drop")
+        xb = maybe_constrain(xb, None, None)
+        g = jnp.einsum("ecd,edf->ecf", xb.reshape(e, cap, d), w_gate.astype(xb.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xb.reshape(e, cap, d), w_up.astype(xb.dtype))
+        h = jax.nn.silu(g) * u                                       # (E,C,F/tp)
+        yb = jnp.einsum("ecf,efd->ecd", h, w_down.astype(h.dtype))
+        yb = maybe_constrain(yb.reshape(e * cap, d), None, None)
+        # gather + weighted combine
+        yt = jnp.take(yb, jnp.clip(flat_idx, 0, e * cap - 1), axis=0)
+        keep = (pos < cap)[:, None].astype(yt.dtype)
+        w = ps.T.reshape(k * gsz, 1).astype(yt.dtype)
+        contrib = (yt * keep * w).reshape(k, gsz, d)
+        return jnp.sum(contrib, axis=0)
+
+    # shard the mapped (group) axis so the dispatch scatter/gather and
+    # expert buffers stay device-local
+    spmd_axes = None
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            wanted = ("pod", "data", "model") if "tp" in group_axes else ("pod", "data")
+            got = tuple(a for a in wanted if a in am.axis_names)
+            spmd_axes = got if got else None
+    except Exception:  # noqa: BLE001
+        spmd_axes = None
+    vm = jax.vmap(per_group, spmd_axis_name=spmd_axes) if spmd_axes else jax.vmap(per_group)
+    y = vm(xg, pg, ig)
+    y = maybe_constrain(y, group_axes, None, None).reshape(n_groups * gsz, d)
+    return y[:n] if pad else y
+
+
+def moe_apply(p: Params, x: Array, cfg: MoEConfig, ctx: QuantContext = NO_QUANT,
+              name: str = "moe") -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, T, D) -> (y, aux_losses)."""
+    b, t, d = x.shape
+    x2d = ctx.act(name + "/in", x.reshape(b * t, d))
+    top_p, top_i, aux = _router(p, x2d, cfg, ctx, name)
+    if cfg.exec_mode == "dense":
+        y = _moe_dense(p, x2d, top_p, top_i, cfg)
+    else:
+        y = _moe_dispatch(p, x2d, top_p, top_i, cfg)
+    if cfg.n_shared_experts > 0:
+        from repro.nn.mlp import mlp_apply
+        y = y + mlp_apply(p["shared"], x2d, cfg.mlp_kind, ctx, name + "/shared")
+    y = ctx.act(name + "/out", y)
+    return y.reshape(b, t, d), aux

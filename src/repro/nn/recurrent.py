@@ -1,0 +1,139 @@
+"""RG-LRU and the Griffin/RecurrentGemma recurrent block (arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)              # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)    # diagonal recurrence, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the affine maps
+(h -> a h + b compose associatively), giving O(log T) depth — the TPU
+adaptation of the paper's custom Pallas/linear-scan GPU kernel; decode
+carries (h, conv_state) explicitly.
+
+Note the RG-LRU's gates already give the head an explicit no-op path
+(i_t -> 0), which is exactly what the Quantizable-Transformers paper adds
+to softmax attention; see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import conv1d_apply, conv1d_init, linear_apply, linear_init
+from repro.nn.module import Array, Params, split_keys
+from repro.quant.qconfig import NO_QUANT, QuantContext
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    width: int                 # recurrent width (= d_model for recurrentgemma)
+    conv_width: int = 4
+    a_init_min: float = 0.9    # Lambda init so a in [0.9, 0.999]
+    a_init_max: float = 0.999
+
+
+def rglru_init(key: Array, cfg: RGLRUConfig, dtype=jnp.float32) -> Params:
+    ka, kx, kl = split_keys(key, 3)
+    std = 1.0 / math.sqrt(cfg.width)
+    u = jax.random.uniform(kl, (cfg.width,), minval=cfg.a_init_min ** 2,
+                           maxval=cfg.a_init_max ** 2)
+    # Lambda such that exp(-c*softplus(Lambda)) = sqrt(u)
+    softplus_val = -0.5 * jnp.log(u) / _C
+    lam = jnp.log(jnp.expm1(softplus_val))
+    return {
+        "w_a": linear_init(ka, cfg.width, cfg.width, std=std, dtype=dtype),
+        "w_x": linear_init(kx, cfg.width, cfg.width, std=std, dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+    }
+
+
+def _gates(p: Params, x: Array, ctx: QuantContext, name: str):
+    r = jax.nn.sigmoid(linear_apply(p["w_a"], x, ctx, name + "/w_a").astype(jnp.float32))
+    i = jax.nn.sigmoid(linear_apply(p["w_x"], x, ctx, name + "/w_x").astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r            # (B,T,D) f32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    return a, gated_x
+
+
+def rglru_scan(p: Params, x: Array, h0: Optional[Array] = None,
+               ctx: QuantContext = NO_QUANT, name: str = "rglru"
+               ) -> Tuple[Array, Array]:
+    """Parallel form. x: (B, T, D) -> (y (B,T,D), h_last (B,D))."""
+    a, b = _gates(p, x, ctx, name)
+    if h0 is not None:
+        # fold the carried state into the first step: h1 = a1 h0 + b1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p: Params, x_t: Array, h: Array,
+               ctx: QuantContext = NO_QUANT, name: str = "rglru"
+               ) -> Tuple[Array, Array]:
+    """Single decode step. x_t: (B, D); h: (B, D) f32."""
+    a, b = _gates(p, x_t[:, None, :], ctx, name)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+# --------------------------------------------------------------------------
+# Griffin recurrent block: (linear, conv, RG-LRU) x (linear, GeLU) -> merge
+# --------------------------------------------------------------------------
+def griffin_block_init(key: Array, d_model: int, cfg: RGLRUConfig,
+                       dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5 = split_keys(key, 5)
+    return {
+        "in_x": linear_init(k1, d_model, cfg.width, bias=False, dtype=dtype),
+        "in_gate": linear_init(k2, d_model, cfg.width, bias=False, dtype=dtype),
+        "conv": conv1d_init(k3, cfg.width, cfg.conv_width, dtype=dtype),
+        "rglru": rglru_init(k4, cfg, dtype=dtype),
+        "out": linear_init(k5, cfg.width, d_model, bias=False, dtype=dtype),
+    }
+
+
+def griffin_block_apply(
+    p: Params, x: Array, cfg: RGLRUConfig,
+    state: Optional[dict] = None,
+    ctx: QuantContext = NO_QUANT, name: str = "griffin",
+) -> Tuple[Array, dict]:
+    """x: (B, T, D). state: {"h": (B,W) f32, "conv": (B,w-1,W)} or None.
+
+    Returns (y, new_state); pass T=1 slices with state for decode.
+    """
+    gate = jax.nn.gelu(linear_apply(p["in_gate"], x, ctx, name + "/in_gate"))
+    u = linear_apply(p["in_x"], x, ctx, name + "/in_x")
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = conv1d_apply(p["conv"], u, conv_state)
+    h0 = None if state is None else state["h"]
+    if x.shape[1] == 1 and state is not None:
+        y_r, h_last = rglru_step(p["rglru"], u[:, 0, :], h0, ctx, name + "/rglru")
+        y_r = y_r[:, None, :]
+    else:
+        y_r, h_last = rglru_scan(p["rglru"], u, h0, ctx, name + "/rglru")
+    merged = ctx.act(name + "/merged", y_r * gate)
+    y = linear_apply(p["out"], merged, ctx, name + "/out")
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def griffin_init_state(batch: int, cfg: RGLRUConfig, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.width), dtype),
+    }

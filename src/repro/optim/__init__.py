@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.compress import ErrorFeedbackState, compress_grads, ef_init
+from repro.optim.schedule import (
+    constant,
+    linear_warmup_cosine,
+    linear_warmup_linear_decay,
+)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm",
+    "ErrorFeedbackState", "compress_grads", "ef_init",
+    "constant", "linear_warmup_cosine", "linear_warmup_linear_decay",
+]

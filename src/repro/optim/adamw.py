@@ -1,0 +1,120 @@
+"""AdamW with decoupled weight decay (Loshchilov & Hutter), built from
+scratch (no optax in this environment).
+
+Includes the paper's OPT trick (App. B.3): optionally extending weight
+decay to LayerNorm scales, which alone dampens outliers — controlled by
+``decay_norm_scales``. Weight-decay masking follows the usual convention
+(no decay on biases / norm params) unless overridden.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Array, Params, flatten_params
+
+NO_DECAY_DEFAULT = (r".*(/b|/bias|/scale|lambda)$",)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4                  # peak LR; schedule multiplies this
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: Optional[float] = 1.0
+    decay_norm_scales: bool = False   # paper App. B.3 ("LN gamma wd")
+    no_decay_patterns: Tuple[str, ...] = NO_DECAY_DEFAULT
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Params
+    nu: Params
+
+
+def _decay_mask(params: Params, cfg: AdamWConfig) -> Params:
+    """Pytree of {0,1} floats: 1 where weight decay applies."""
+    pats = cfg.no_decay_patterns
+    if cfg.decay_norm_scales:
+        # keep biases un-decayed but decay norm scales
+        pats = (r".*/b$", r".*/bias$", r".*lambda$")
+    flat = dict(flatten_params(params))
+    masks = {
+        path: 0.0 if any(re.match(p, path) for p in pats) else 1.0
+        for path in flat
+    }
+    # rebuild tree in params' structure
+    leaves_with_path = list(flatten_params(params))
+    mask_leaves = [masks[path] for path, _ in leaves_with_path]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, mask_leaves)
+
+
+def global_norm(tree: Params) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: Params,
+    state: AdamWState,
+    params: Params,
+    cfg: AdamWConfig,
+    lr_scale: Array = 1.0,
+) -> Tuple[Params, AdamWState, Dict[str, Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    metrics: Dict[str, Array] = {}
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    mask = _decay_mask(params, cfg)
+
+    def upd(g, m, v, p, dm):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        delta = delta + cfg.weight_decay * dm * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params, mask)
+    # unzip the 3-tuples
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    metrics["update_norm"] = global_norm(
+        jax.tree_util.tree_map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                               new_params, params))
+    return new_params, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,34 @@
+"""LR schedules as pure functions step -> multiplier (peak LR lives in
+AdamWConfig). Matches the paper's setups: linear warmup + linear decay
+(BERT/OPT pre-training) and cosine with warmup (ViT)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def linear_warmup_linear_decay(warmup: int, total: int) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        decay = (total - step) / jnp.maximum(total - warmup, 1)
+        return jnp.clip(jnp.minimum(warm, decay), 0.0, 1.0)
+    return fn
+
+
+def linear_warmup_cosine(warmup: int, total: int, min_frac: float = 0.01) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant() -> Schedule:
+    return lambda step: jnp.ones((), jnp.float32)

@@ -1,0 +1,31 @@
+"""Quantization substrate: fake-quant, range estimation, PTQ driver."""
+from repro.quant.quantizer import (
+    QuantSpec,
+    dequantize,
+    fake_quant,
+    quantization_error,
+    quantize,
+    scale_zero_point,
+)
+from repro.quant.ranges import (
+    MinMaxEstimator,
+    MSEEstimator,
+    PercentileEstimator,
+    RangeEstimator,
+    RunningMinMaxEstimator,
+    make_estimator,
+)
+from repro.quant.qconfig import NO_QUANT, QConfig, QuantContext
+from repro.quant.ptq import calibrate, evaluate_perplexity, make_quantized_apply, ptq_sweep
+
+__all__ = [
+    "QuantSpec", "dequantize", "fake_quant", "quantization_error", "quantize",
+    "scale_zero_point",
+    "MinMaxEstimator", "MSEEstimator", "PercentileEstimator", "RangeEstimator",
+    "RunningMinMaxEstimator", "make_estimator",
+    "NO_QUANT", "QConfig", "QuantContext",
+    "calibrate", "evaluate_perplexity", "make_quantized_apply", "ptq_sweep",
+]
+from repro.quant.int8_weights import build_int8_cache, int8_cache_bytes, linear_int8  # noqa: E402
+
+__all__ += ["build_int8_cache", "int8_cache_bytes", "linear_int8"]

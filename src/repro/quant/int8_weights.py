@@ -1,0 +1,58 @@
+"""Hardware-path W8A8 serving: convert calibrated FP params into an int8
+weight cache and run linears through the Pallas MXU kernel.
+
+``fake_quant`` (quant/quantizer.py) *simulates* integer inference in float —
+that is the paper's evaluation protocol. This module is the deployment
+counterpart: weights are stored as actual int8 (+ per-tensor scale),
+activations are quantized on the fly inside the kernel, and matmuls run
+int8 x int8 -> int32 (repro.kernels.int8_matmul). The two paths agree to
+rounding (tests/test_int8_serving.py) — agreement is only possible because
+the paper's methods removed the activation outliers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul import int8_matmul, quantize_weights_int8
+from repro.nn.module import flatten_params
+
+Array = jax.Array
+
+# param paths worth int8-caching: the big matmul weights
+_MATMUL_W = re.compile(
+    r".*/(q|k|v|o|up|gate|down|in_x|in_gate|out|w_a|w_x|zifo|ff_up|ff_gate|"
+    r"ff_down)/w$|.*lm_head/w$|.*embed/table$")
+
+
+def build_int8_cache(params: Any, skip: Tuple[str, ...] = (r".*lm_head.*",)
+                     ) -> Dict[str, Tuple[Array, Array]]:
+    """Quantize every matmul weight to (int8 tensor, f32 scale)."""
+    cache: Dict[str, Tuple[Array, Array]] = {}
+    for path, leaf in flatten_params(params):
+        if leaf.ndim != 2 or not _MATMUL_W.match(path):
+            continue
+        if any(re.match(p, path) for p in skip):
+            continue
+        wq, s = quantize_weights_int8(leaf)
+        cache[path] = (wq, s)
+    return cache
+
+
+def int8_cache_bytes(cache: Dict[str, Tuple[Array, Array]]) -> int:
+    return sum(int(wq.size) for wq, _ in cache.values())
+
+
+def linear_int8(cache: Dict[str, Tuple[Array, Array]], path: str,
+                x: Array, bias: Array = None, interpret: bool = True) -> Array:
+    """Run one cached linear through the integer kernel."""
+    wq, s = cache[path]
+    lead = x.shape[:-1]
+    y = int8_matmul(x.reshape(-1, x.shape[-1]), wq, s, interpret=interpret)
+    y = y.reshape(*lead, wq.shape[1])
+    if bias is not None:
+        y = y + bias
+    return y

@@ -1,0 +1,124 @@
+"""Model-level quantization configuration + the QuantContext threaded
+through model ``apply``.
+
+The paper's PTQ protocol (Section 5, App. C.4):
+  * quantize ALL weights and ALL activations (inputs AND outputs of ops),
+  * symmetric uniform weights / asymmetric uniform activations,
+  * static activation ranges from a few calibration batches,
+  * skip the final LM-head linear (BERT/OPT).
+
+``QuantContext`` is how the model graph exposes quantization sites without a
+module framework: every layer calls ``ctx.act(name, x)`` on activations and
+``ctx.weight(name, w)`` on parameters right before use. The context is one
+of three modes:
+
+  off      — identity (training / FP evaluation)
+  collect  — record tensors for range estimation (run UN-jitted)
+  apply    — fake-quantize using finalized (s, z)  (jit-safe; scales are
+             closed-over constants)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantizer import QuantSpec, fake_quant, scale_zero_point
+from repro.quant.ranges import RangeEstimator, make_estimator
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    """What to quantize and how (one per experiment row, e.g. 'W8A8')."""
+
+    weight_bits: int = 8
+    act_bits: int = 8
+    weight_estimator: str = "minmax"      # "minmax" | "mse"
+    act_estimator: str = "running_minmax" # + "percentile", "mse"
+    act_estimator_kwargs: tuple = ()      # e.g. (("percentile", 99.999),)
+    skip_patterns: Tuple[str, ...] = (r".*lm_head.*",)  # final linear skipped
+    per_channel_weights: bool = False      # paper uses per-tensor
+
+    @property
+    def name(self) -> str:
+        return f"W{self.weight_bits}A{self.act_bits}"
+
+    def weight_spec(self, ndim: int = 2) -> QuantSpec:
+        axis = (ndim - 1) if self.per_channel_weights else None
+        return QuantSpec(bits=self.weight_bits, symmetric=True, per_channel_axis=axis)
+
+    def act_spec(self) -> QuantSpec:
+        return QuantSpec(bits=self.act_bits, symmetric=False)
+
+    def skipped(self, name: str) -> bool:
+        return any(re.match(p, name) for p in self.skip_patterns)
+
+
+class QuantContext:
+    """Threaded through model.apply; see module docstring."""
+
+    def __init__(self, qconfig: Optional[QConfig], mode: str = "off") -> None:
+        assert mode in ("off", "collect", "apply")
+        self.qconfig = qconfig
+        self.mode = mode if qconfig is not None else "off"
+        self._estimators: Dict[str, RangeEstimator] = {}
+        self._ranges: Dict[str, Tuple[Array, Array]] = {}
+
+    # -- calibration ------------------------------------------------------
+    def _estimator_for(self, name: str, spec: QuantSpec, kind: str) -> RangeEstimator:
+        if name not in self._estimators:
+            kw = dict(self.qconfig.act_estimator_kwargs) if not spec.symmetric else {}
+            self._estimators[name] = make_estimator(kind, spec, **kw)
+        return self._estimators[name]
+
+    def finalize(self) -> None:
+        """Close all estimators into static (s, z); switch to 'apply'."""
+        for name, est in self._estimators.items():
+            self._ranges[name] = est.finalize()
+        self.mode = "apply"
+
+    @property
+    def ranges(self) -> Dict[str, Tuple[Array, Array]]:
+        return dict(self._ranges)
+
+    def load_ranges(self, ranges: Dict[str, Tuple[Array, Array]]) -> None:
+        self._ranges = dict(ranges)
+        self.mode = "apply"
+
+    # -- the two quantization sites --------------------------------------
+    def act(self, name: str, x: Array) -> Array:
+        if self.mode == "off" or self.qconfig is None or self.qconfig.skipped(name):
+            return x
+        spec = self.qconfig.act_spec()
+        if self.mode == "collect":
+            self._estimator_for(name, spec, self.qconfig.act_estimator).update(x)
+            return x
+        if name not in self._ranges:   # site unseen during calibration
+            return x
+        lo, hi = self._ranges[name]
+        s, z = scale_zero_point(lo, hi, spec)
+        return fake_quant(x, s, z, spec)
+
+    def weight(self, name: str, w: Array) -> Array:
+        if self.mode == "off" or self.qconfig is None or self.qconfig.skipped(name):
+            return w
+        spec = self.qconfig.weight_spec(w.ndim)
+        wname = name + "#w"
+        if self.mode == "collect":
+            self._estimator_for(wname, spec, self.qconfig.weight_estimator).update(w)
+            return w
+        if wname not in self._ranges:
+            # Weights are static — derive the range on the fly (min-max).
+            lo, hi = jnp.min(w), jnp.max(w)
+        else:
+            lo, hi = self._ranges[wname]
+        s, z = scale_zero_point(lo, hi, spec)
+        return fake_quant(w, s, z, spec)
+
+
+NO_QUANT = QuantContext(None, "off")

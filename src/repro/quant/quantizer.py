@@ -1,0 +1,108 @@
+"""Uniform affine quantization simulation (paper Section 2, Eq. 1).
+
+    q(x; s, z, b) = s * (clip(round(x / s) + z, 0, 2^b - 1) - z)
+
+Asymmetric (affine) quantization for activations, symmetric for weights —
+the paper's W8A8 PTQ setup (Section 5, "Quantization setup"). Fake-quant is
+simulated in floating point per Jacob et al. [26], with a straight-through
+estimator so QAT-style fine-tuning also works.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantizer."""
+
+    bits: int = 8
+    symmetric: bool = False       # True for weights, False for activations
+    per_channel_axis: Optional[int] = None  # None = per-tensor (paper default)
+
+    @property
+    def n_levels(self) -> int:
+        return 2 ** self.bits
+
+
+def scale_zero_point(
+    x_min: Array, x_max: Array, spec: QuantSpec, eps: float = 1e-8
+) -> Tuple[Array, Array]:
+    """Scale s and zero-point z from a (min, max) range.
+
+    Symmetric: grid symmetric around 0, z = 2^(b-1) (mid level) so that the
+    dequantized grid is s * [-2^(b-1), 2^(b-1)-1].
+    Asymmetric: classic uniform affine with the range nudged to include 0.
+    """
+    x_min = jnp.asarray(x_min, jnp.float32)
+    x_max = jnp.asarray(x_max, jnp.float32)
+    n = spec.n_levels
+    if spec.symmetric:
+        amax = jnp.maximum(jnp.abs(x_min), jnp.abs(x_max))
+        s = jnp.maximum(amax / (n / 2 - 1), eps)
+        z = jnp.full_like(s, n // 2)
+    else:
+        x_min = jnp.minimum(x_min, 0.0)   # range must include zero
+        x_max = jnp.maximum(x_max, 0.0)
+        s = jnp.maximum((x_max - x_min) / (n - 1), eps)
+        z = jnp.round(-x_min / s)
+        z = jnp.clip(z, 0, n - 1)
+    return s, z
+
+
+def quantize(x: Array, s: Array, z: Array, spec: QuantSpec) -> Array:
+    """x -> integer grid (stored as int32) via Eq. 1 (without dequant)."""
+    if spec.per_channel_axis is not None:
+        shape = [1] * x.ndim
+        shape[spec.per_channel_axis] = -1
+        s = s.reshape(shape)
+        z = z.reshape(shape)
+    q = jnp.round(x / s) + z
+    return jnp.clip(q, 0, spec.n_levels - 1).astype(jnp.int32)
+
+
+def dequantize(q: Array, s: Array, z: Array, spec: QuantSpec) -> Array:
+    if spec.per_channel_axis is not None:
+        shape = [1] * q.ndim
+        shape[spec.per_channel_axis] = -1
+        s = s.reshape(shape)
+        z = z.reshape(shape)
+    return (s * (q.astype(jnp.float32) - z)).astype(jnp.float32)
+
+
+def fake_quant(x: Array, s: Array, z: Array, spec: QuantSpec) -> Array:
+    """Simulated quantization q(x) (Eq. 1), with a straight-through gradient.
+
+    forward:  dequantize(quantize(x))
+    backward: identity inside the representable range (STE); values that
+    were clipped get zero gradient (matches integer-hardware behaviour and
+    the paper's clipping-stops-gradients insight).
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if spec.per_channel_axis is not None:
+        shape = [1] * x.ndim
+        shape[spec.per_channel_axis] = -1
+        s_b = s.reshape(shape)
+        z_b = z.reshape(shape)
+    else:
+        s_b, z_b = s, z
+    lo = s_b * (0.0 - z_b)
+    hi = s_b * (spec.n_levels - 1 - z_b)
+    x_clip = jnp.clip(xf, lo, hi)                      # STE passes grad here
+    # Quant-dequant of the clipped value; stop_gradient on the rounding
+    # residual gives the straight-through estimator.
+    qd = s_b * (jnp.clip(jnp.round(x_clip / s_b + z_b), 0, spec.n_levels - 1) - z_b)
+    out = x_clip + jax.lax.stop_gradient(qd - x_clip)
+    return out.astype(dtype)
+
+
+def quantization_error(x: Array, s: Array, z: Array, spec: QuantSpec) -> Array:
+    """Mean squared error of fake-quantizing x — used by the MSE estimator."""
+    return jnp.mean((x.astype(jnp.float32) - fake_quant(x, s, z, spec).astype(jnp.float32)) ** 2)

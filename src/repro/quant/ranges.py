@@ -1,0 +1,178 @@
+"""Quantization range estimators (paper Appendix C.4).
+
+  - ``MinMaxEstimator``        : running exact min/max
+  - ``RunningMinMaxEstimator`` : EMA of batch min/max, momentum 0.9 over 16
+                                 calibration batches (paper's main setting)
+  - ``PercentileEstimator``    : 99.99% / 99.999% percentiles (best for OPT)
+  - ``MSEEstimator``           : grid-search the clipping range minimizing
+                                 quantization MSE (recommended for <8-bit,
+                                 paper App. B.7 / Banner et al.)
+
+All estimators consume activation (or weight) tensors batch-by-batch during
+calibration and produce a final (min, max) range, from which
+``quantizer.scale_zero_point`` derives (s, z).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.quantizer import QuantSpec, quantization_error, scale_zero_point
+
+Array = jax.Array
+
+
+class RangeEstimator:
+    """Base: stateful accumulator over calibration batches."""
+
+    def update(self, x: Array) -> None:
+        raise NotImplementedError
+
+    def finalize(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        raise NotImplementedError
+
+
+class MinMaxEstimator(RangeEstimator):
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+
+    def update(self, x: Array) -> None:
+        lo = float(jnp.min(x))
+        hi = float(jnp.max(x))
+        self._min = lo if self._min is None else min(self._min, lo)
+        self._max = hi if self._max is None else max(self._max, hi)
+
+    def finalize(self):
+        assert self._min is not None, "estimator saw no data"
+        return jnp.float32(self._min), jnp.float32(self._max)
+
+
+class RunningMinMaxEstimator(RangeEstimator):
+    """Exponential moving average of per-batch min/max (Krishnamoorthi [32])."""
+
+    def __init__(self, momentum: float = 0.9) -> None:
+        self.momentum = momentum
+        self.reset()
+
+    def reset(self) -> None:
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+
+    def update(self, x: Array) -> None:
+        lo = float(jnp.min(x))
+        hi = float(jnp.max(x))
+        if self._min is None:
+            self._min, self._max = lo, hi
+        else:
+            m = self.momentum
+            self._min = m * self._min + (1 - m) * lo
+            self._max = m * self._max + (1 - m) * hi
+
+    def finalize(self):
+        assert self._min is not None, "estimator saw no data"
+        return jnp.float32(self._min), jnp.float32(self._max)
+
+
+class PercentileEstimator(RangeEstimator):
+    """min/max replaced by (1-p)/p percentiles of the pooled sample.
+
+    The paper found 99.999% percentiles give the lowest W8A8 perplexity for
+    OPT. We keep a bounded reservoir per batch to stay memory-safe.
+    """
+
+    def __init__(self, percentile: float = 99.999, reservoir: int = 1 << 20) -> None:
+        assert 50.0 < percentile < 100.0
+        self.percentile = percentile
+        self.reservoir = reservoir
+        self.reset()
+
+    def reset(self) -> None:
+        self._samples: list[np.ndarray] = []
+        self._rng = np.random.default_rng(0)
+
+    def update(self, x: Array) -> None:
+        flat = np.asarray(x, dtype=np.float32).reshape(-1)
+        if flat.size > self.reservoir:
+            flat = self._rng.choice(flat, size=self.reservoir, replace=False)
+        self._samples.append(flat)
+
+    def finalize(self):
+        assert self._samples, "estimator saw no data"
+        pooled = np.concatenate(self._samples)
+        lo = np.percentile(pooled, 100.0 - self.percentile)
+        hi = np.percentile(pooled, self.percentile)
+        return jnp.float32(lo), jnp.float32(hi)
+
+
+class MSEEstimator(RangeEstimator):
+    """Clipping-range grid search minimizing fake-quant MSE.
+
+    Candidates are the observed min-max range scaled by factors in
+    (0, 1]; the factor minimizing sum of per-batch quantization MSE wins.
+    Used for weights (OPT) and all <8-bit settings (paper App. B.7).
+    """
+
+    def __init__(self, spec: QuantSpec, n_candidates: int = 40) -> None:
+        self.spec = spec
+        self.n_candidates = n_candidates
+        self.reset()
+
+    def reset(self) -> None:
+        self._batches: list[jnp.ndarray] = []
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+
+    def update(self, x: Array) -> None:
+        lo = float(jnp.min(x))
+        hi = float(jnp.max(x))
+        self._min = lo if self._min is None else min(self._min, lo)
+        self._max = hi if self._max is None else max(self._max, hi)
+        flat = jnp.ravel(jnp.asarray(x, jnp.float32))
+        if flat.size > (1 << 18):
+            idx = np.random.default_rng(len(self._batches)).choice(
+                flat.size, size=1 << 18, replace=False
+            )
+            flat = flat[jnp.asarray(idx)]
+        self._batches.append(flat)
+
+    def finalize(self):
+        assert self._batches, "estimator saw no data"
+        pooled = jnp.concatenate(self._batches)
+        # independent grid over lo/hi clipping factors: outliers are often
+        # one-sided (paper Fig. 1), so scaling both ends together would
+        # sacrifice the clean side of the distribution
+        n = max(int(self.n_candidates ** 0.5), 6)
+        factors = np.linspace(1.0 / n, 1.0, n)
+        best = (None, np.inf)
+        for f_lo in factors:
+            for f_hi in factors:
+                lo = jnp.float32(self._min * f_lo)
+                hi = jnp.float32(self._max * f_hi)
+                s, z = scale_zero_point(lo, hi, self.spec)
+                err = float(quantization_error(pooled, s, z, self.spec))
+                if err < best[1]:
+                    best = ((lo, hi), err)
+        return best[0]
+
+
+def make_estimator(kind: str, spec: QuantSpec, **kw) -> RangeEstimator:
+    if kind == "minmax":
+        return MinMaxEstimator()
+    if kind == "running_minmax":
+        return RunningMinMaxEstimator(**kw)
+    if kind == "percentile":
+        return PercentileEstimator(**kw)
+    if kind == "mse":
+        return MSEEstimator(spec, **kw)
+    raise ValueError(f"unknown range estimator {kind!r}")

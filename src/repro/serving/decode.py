@@ -1,0 +1,66 @@
+"""Batched serving: prefill + greedy/temperature decode with a static KV
+cache. ``generate`` drives (prefill_step, decode_step) — the same functions
+the decode_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache, model_apply
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 => greedy
+    eos_id: Optional[int] = None
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
+    """Run the prompt through the model, building the KV cache.
+
+    Returns (last_logits (B, vocab), cache, prompt_len)."""
+    b, t = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    logits, aux = model_apply(params, cfg, {"tokens": tokens},
+                              cache=cache, pos=0)
+    return logits[:, -1, :], aux["cache"], t
+
+
+def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos):
+    logits, aux = model_apply(params, cfg, {"tokens": tokens},
+                              cache=cache, pos=pos)
+    return logits[:, -1, :], aux["cache"]
+
+
+def generate(params, cfg: ModelConfig, prompt: Array, gen: GenerateConfig,
+             key: Optional[Array] = None) -> Array:
+    """Greedy/temperature sampling. prompt: (B, T) int32. Returns
+    (B, T + max_new_tokens)."""
+    b, t = prompt.shape
+    max_len = t + gen.max_new_tokens
+    last_logits, cache, pos = prefill(params, cfg, prompt, max_len)
+    decode = jax.jit(decode_one, static_argnums=(1,))
+
+    def sample(logits, k):
+        if gen.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / gen.temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = [prompt]
+    cur = sample(last_logits, key)[:, None]
+    for i in range(gen.max_new_tokens - 1):
+        toks.append(cur)
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cfg, cache, cur, pos)
+        pos = pos + 1
+        cur = sample(logits, sub)[:, None]
+    toks.append(cur)
+    return jnp.concatenate(toks, axis=1)

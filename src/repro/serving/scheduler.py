@@ -1,0 +1,164 @@
+"""Continuous-batching request scheduler for the decode path.
+
+Real serving stacks (vLLM/JetStream-style) keep the decode batch full by
+slotting new requests into finished sequences' cache rows instead of
+waiting for the whole batch to drain. This is the jax-native equivalent:
+
+  * a fixed-shape slot pool (batch B, max_len L) holds the KV cache;
+  * each step decodes every active slot (one fused decode_step);
+  * finished slots (EOS or length budget) are refilled from the queue by
+    running a per-slot prefill into the shared cache row.
+
+Slot bookkeeping is host-side python (cheap, O(B) per step); all tensor
+work stays jitted with static shapes — the pattern that scales to the
+pod-sharded cache (slots = batch rows, already sharded over dp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig, init_cache, model_apply
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (T,) int32
+    max_new_tokens: int = 32
+    # filled by the scheduler
+    output: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                     # next cache position
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatcher:
+    """Slot-pool scheduler over a shared static KV cache."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_size: int,
+                 max_len: int, eos_id: Optional[int] = None) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_size
+        self.L = max_len
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, batch_size, max_len)
+        self.slots = [_Slot() for _ in range(batch_size)]
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+
+        def _decode(params, cache, tokens, pos_vec):
+            # per-slot positions: run with the max pos and mask via causal
+            # offsets is incorrect for mixed positions, so decode uses a
+            # shared position per step; slots therefore decode in lockstep
+            # cohorts (same pos) — we group by pos below.
+            logits, aux = model_apply(params, cfg, {"tokens": tokens},
+                                      cache=cache, pos=pos_vec)
+            return jnp.argmax(logits[:, -1, :], axis=-1), aux["cache"]
+
+        self._decode = jax.jit(_decode)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.req is None]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots. Each prefill runs on
+        its own batch-1 cache and the resulting row is inserted into the
+        slot pool — never touching in-flight rows."""
+        for i in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            t = len(req.prompt)
+            single = init_cache(self.cfg, 1, self.L)
+            logits, aux = model_apply(
+                self.params, self.cfg,
+                {"tokens": jnp.asarray(req.prompt)[None, :]},
+                cache=single, pos=0)
+
+            def insert(pool_leaf, row_leaf):
+                if row_leaf is not None and pool_leaf.ndim >= 1 and \
+                        row_leaf.shape[:1] == (1,) and \
+                        pool_leaf.shape[0] == self.B:
+                    return pool_leaf.at[i].set(row_leaf[0])
+                return pool_leaf  # batch-free leaves (e.g. ring pos_ids)
+
+            self.cache = jax.tree_util.tree_map(insert, self.cache,
+                                                aux["cache"])
+            self.slots[i] = _Slot(req=req, pos=t,
+                                  generated=[int(jnp.argmax(logits[0, -1]))])
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            out_len = len(s.generated)
+            hit_eos = self.eos_id is not None and s.generated and \
+                s.generated[-1] == self.eos_id
+            if out_len >= s.req.max_new_tokens or hit_eos or s.pos >= self.L - 1:
+                s.req.output = np.asarray(s.generated, np.int32)
+                self.done.append(s.req)
+                self.slots[i] = _Slot()
+
+    def step(self) -> int:
+        """One scheduler tick: admit, decode one token for the active
+        cohort, retire. Returns number of active slots."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        # cohort = slots sharing the same pos (lockstep decode);
+        # pick the largest cohort this tick
+        by_pos: Dict[int, List[int]] = {}
+        for i in active:
+            by_pos.setdefault(self.slots[i].pos, []).append(i)
+        pos, cohort = max(by_pos.items(), key=lambda kv: len(kv[1]))
+        toks = np.zeros((self.B, 1), np.int32)
+        for i in cohort:
+            toks[i, 0] = self.slots[i].generated[-1]
+        prev_cache = self.cache
+        next_tok, new_cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), pos)
+        # the decode step wrote position `pos` (and advanced recurrent
+        # state) for EVERY row; restore the rows that are not in this
+        # cohort so their caches are untouched. (A production kernel would
+        # use masked per-row writes; one tick of double-buffering is the
+        # simple correct equivalent.)
+        others = [i for i in range(self.B) if i not in cohort]
+        if others:
+            idx = jnp.asarray(others)
+
+            def restore(new_leaf, old_leaf):
+                if new_leaf.ndim >= 1 and new_leaf.shape[0] == self.B:
+                    return new_leaf.at[idx].set(old_leaf[idx])
+                return old_leaf
+            new_cache = jax.tree_util.tree_map(restore, new_cache, prev_cache)
+        self.cache = new_cache
+        nt = np.asarray(next_tok)
+        for i in cohort:
+            self.slots[i].generated.append(int(nt[i]))
+            self.slots[i].pos += 1
+        self._retire()
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(s.req for s in self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

@@ -1,0 +1,126 @@
+"""Training loop with outlier telemetry, checkpoint/restart and straggler
+timing telemetry — the paper's pre-training protocol as a library function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.outliers import OutlierStats
+from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
+from repro.train.step import TrainState, TrainTask, init_train_state, make_eval_step, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 200
+    eval_every: int = 100
+    eval_batches: int = 8
+    ckpt_every: int = 0              # 0 = disabled
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    log_every: int = 20
+    seed: int = 0
+    # straggler telemetry: steps slower than `straggler_factor` x median are
+    # counted and reported (on real fleets this feeds the re-scheduler)
+    straggler_factor: float = 2.0
+
+
+def run_training(
+    task: TrainTask,
+    data: SyntheticLM,
+    loop: LoopConfig,
+    batch_kind: str = "clm",
+    log: Callable[[str], None] = print,
+) -> Dict[str, object]:
+    """Returns final state + history of losses/outlier metrics."""
+    key = jax.random.PRNGKey(loop.seed)
+    state = init_train_state(key, task)
+    start_step = 0
+    if loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
+        state, start_step = restore_checkpoint(loop.ckpt_dir, state)
+        log(f"[resume] restored step {start_step} from {loop.ckpt_dir}")
+
+    train_step = jax.jit(make_train_step(task), donate_argnums=(0,))
+    eval_step = jax.jit(make_eval_step(task))
+
+    history: Dict[str, List[float]] = {
+        "step": [], "loss": [], "eval_ppl": [], "max_inf_norm": [], "kurtosis": [],
+    }
+    durations: List[float] = []
+    stragglers = 0
+
+    for step in range(start_step, loop.total_steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, data.batch(step, batch_kind))
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, batch)
+        metrics["loss"].block_until_ready()
+        dt = time.perf_counter() - t0
+        durations.append(dt)
+        if len(durations) > 10:
+            med = float(np.median(durations[-100:]))
+            if dt > loop.straggler_factor * med:
+                stragglers += 1
+
+        if loop.log_every and (step + 1) % loop.log_every == 0:
+            log(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics.get('grad_norm', 0)):.2f} "
+                f"max_act {float(metrics.get('max_act', 0)):.1f} {dt*1e3:.0f}ms")
+
+        if loop.eval_every and (step + 1) % loop.eval_every == 0:
+            ppl, ostats = evaluate(task, state.params, data, loop.eval_batches,
+                                   batch_kind, eval_step)
+            history["step"].append(step + 1)
+            history["loss"].append(float(metrics["loss"]))
+            history["eval_ppl"].append(ppl)
+            history["max_inf_norm"].append(ostats["max_inf_norm"])
+            history["kurtosis"].append(ostats["avg_kurtosis"])
+            log(f"  eval ppl {ppl:.3f} inf_norm {ostats['max_inf_norm']:.1f} "
+                f"kurtosis {ostats['avg_kurtosis']:.0f}")
+
+        if loop.ckpt_every and loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+            save_checkpoint(loop.ckpt_dir, step + 1, state, loop.keep_ckpts)
+
+    if loop.ckpt_dir and loop.ckpt_every:
+        save_checkpoint(loop.ckpt_dir, loop.total_steps, state, loop.keep_ckpts)
+
+    return {
+        "state": state,
+        "history": history,
+        "stragglers": stragglers,
+        "median_step_s": float(np.median(durations)) if durations else 0.0,
+    }
+
+
+def evaluate(task: TrainTask, params, data: SyntheticLM, n_batches: int,
+             batch_kind: str, eval_step=None, eval_offset: int = 10_000_000):
+    """Perplexity + paper outlier metrics on held-out (offset) batches."""
+    from repro.models.transformer import model_apply
+
+    if eval_step is None:
+        eval_step = jax.jit(make_eval_step(task))
+
+    @jax.jit
+    def acts_fn(p, batch):
+        _, aux = model_apply(p, task.cfg, batch, collect_acts=True)
+        return aux.get("attn_outputs", [])
+
+    nll = tok = 0.0
+    ostats = OutlierStats()
+    for i in range(n_batches):
+        batch = jax.tree_util.tree_map(
+            jnp.asarray, data.batch(eval_offset + i, batch_kind))
+        out = eval_step(params, batch)
+        nll += float(out["nll"])
+        tok += float(out["ntok"])
+        acts = acts_fn(params, batch)
+        if acts:
+            ostats.update(acts)
+    ppl = float(np.exp(nll / max(tok, 1.0)))
+    return ppl, ostats.summary()

@@ -1,0 +1,46 @@
+"""Loss functions: causal LM (shifted), masked LM (ignore_index=-100),
+frame classification (encoder heads). All return (sum_nll_f32, n_tokens)
+so callers can aggregate exact perplexities across batches."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+IGNORE = -100
+
+
+def _nll(logits: Array, labels: Array, valid: Array) -> Tuple[Array, Array]:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll), jnp.sum(valid)
+
+
+def clm_loss(logits: Array, labels: Array) -> Tuple[Array, Array]:
+    """Causal LM: predict token t+1 from logits at t."""
+    lg = logits[:, :-1, :]
+    lb = labels[:, 1:]
+    valid = (lb != IGNORE).astype(jnp.float32)
+    return _nll(lg, lb, valid)
+
+
+def mlm_loss(logits: Array, labels: Array) -> Tuple[Array, Array]:
+    """Masked LM: labels are -100 except at masked positions."""
+    valid = (labels != IGNORE).astype(jnp.float32)
+    return _nll(logits, labels, valid)
+
+
+def frame_loss(logits: Array, labels: Array) -> Tuple[Array, Array]:
+    """Per-frame classification over all positions (hubert-style)."""
+    valid = (labels != IGNORE).astype(jnp.float32)
+    return _nll(logits, labels, valid)
+
+
+def loss_for(kind: str):
+    return {"clm": clm_loss, "mlm": mlm_loss, "frames": frame_loss}[kind]

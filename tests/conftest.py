@@ -1,0 +1,3 @@
+# Test-session configuration. Tests run on the default single CPU device;
+# multi-device sharding tests spawn subprocesses with their own XLA_FLAGS
+# (see test_sharding_dryrun.py).

@@ -1,0 +1,162 @@
+"""NN substrate: MoE dispatch, xLSTM chunkwise, RG-LRU scan, conv state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.layers import conv1d_apply, conv1d_init
+from repro.nn.moe import MoEConfig, moe_apply, moe_init
+from repro.nn.recurrent import (
+    RGLRUConfig, griffin_block_apply, griffin_block_init, griffin_init_state,
+    rglru_scan, rglru_step, rglru_init,
+)
+from repro.nn.xlstm import (
+    XLSTMConfig, mlstm_block_apply, mlstm_block_init, mlstm_chunkwise,
+    mlstm_recurrent_ref, slstm_block_apply, slstm_block_init, xlstm_init_state,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestMoE:
+    def test_dispatch_matches_dense_with_slack_capacity(self):
+        d = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=8.0,
+                      group_size=64, exec_mode="dense")
+        s = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=8.0,
+                      group_size=64, exec_mode="dispatch")
+        p = moe_init(KEY, 32, d)
+        x = jax.random.normal(KEY, (2, 50, 32))
+        yd, _ = moe_apply(p, x, d)
+        ys, _ = moe_apply(p, x, s)
+        np.testing.assert_allclose(yd, ys, atol=1e-4)
+
+    def test_tight_capacity_finite(self):
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, capacity_factor=0.25,
+                        group_size=64, exec_mode="dispatch")
+        p = moe_init(KEY, 32, cfg)
+        y, _ = moe_apply(p, jax.random.normal(KEY, (2, 64, 32)), cfg)
+        assert not bool(jnp.any(jnp.isnan(y)))
+
+    def test_shared_experts(self):
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, n_shared_experts=2,
+                        shared_d_ff=24, capacity_factor=4.0, group_size=32,
+                        exec_mode="dispatch")
+        p = moe_init(KEY, 32, cfg)
+        y, aux = moe_apply(p, jax.random.normal(KEY, (1, 32, 32)), cfg)
+        assert y.shape == (1, 32, 32)
+        assert "load_balance" in aux and float(aux["load_balance"]) > 0
+
+    def test_load_balance_loss_minimal_when_uniform(self):
+        """LB loss lower-bounded by 1 (Switch); uniform routing hits it."""
+        cfg = MoEConfig(n_experts=4, top_k=1, d_ff=8, exec_mode="dense")
+        p = moe_init(KEY, 16, cfg)
+        # uniform router
+        p["router"]["w"] = jnp.zeros_like(p["router"]["w"])
+        _, aux = moe_apply(p, jax.random.normal(KEY, (1, 256, 16)), cfg)
+        assert float(aux["load_balance"]) == pytest.approx(1.0, abs=0.15)
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_grad_flows(self, seed):
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=8, capacity_factor=2.0,
+                        group_size=32, exec_mode="dispatch")
+        p = moe_init(jax.random.PRNGKey(seed), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 32, 16))
+        g = jax.grad(lambda pp: moe_apply(pp, x, cfg)[0].sum())(p)
+        gn = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+        assert np.isfinite(gn) and gn > 0
+
+
+class TestXLSTM:
+    def test_chunkwise_matches_recurrent(self):
+        B, T, H, D = 2, 37, 3, 8
+        ks = jax.random.split(KEY, 5)
+        q, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+        logi = jax.random.normal(ks[3], (B, T, H))
+        logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)) + 2)
+        h_ref, s_ref = mlstm_recurrent_ref(q, k, v, logi, logf)
+        h_ck, s_ck = mlstm_chunkwise(q, k, v, logi, logf, chunk=16)
+        np.testing.assert_allclose(h_ref, h_ck, atol=1e-4)
+        for a, b in zip(s_ref, s_ck):
+            np.testing.assert_allclose(a, b, atol=1e-3)
+
+    def test_state_continuation(self):
+        B, T, H, D = 1, 24, 2, 4
+        ks = jax.random.split(KEY, 5)
+        q, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+        logi = jax.random.normal(ks[3], (B, T, H))
+        logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)))
+        h_full, _ = mlstm_chunkwise(q, k, v, logi, logf, chunk=8)
+        h1, s1 = mlstm_chunkwise(q[:, :10], k[:, :10], v[:, :10],
+                                 logi[:, :10], logf[:, :10], chunk=8)
+        h2, _ = mlstm_chunkwise(q[:, 10:], k[:, 10:], v[:, 10:],
+                                logi[:, 10:], logf[:, 10:], chunk=8, state=s1)
+        np.testing.assert_allclose(
+            jnp.concatenate([h1, h2], axis=1), h_full, atol=1e-4)
+
+    def test_mlstm_block_decode_matches_full(self):
+        cfg = XLSTMConfig(d_model=32, n_heads=4, chunk_size=8)
+        p = mlstm_block_init(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 16, 32))
+        full, _ = mlstm_block_apply(p, x, cfg, state=xlstm_init_state(2, "mlstm", cfg))
+        st_ = xlstm_init_state(2, "mlstm", cfg)
+        outs = []
+        for t in range(16):
+            o, st_ = mlstm_block_apply(p, x[:, t:t + 1], cfg, state=st_)
+            outs.append(o)
+        np.testing.assert_allclose(full, jnp.concatenate(outs, axis=1), atol=2e-3)
+
+    def test_slstm_block(self):
+        cfg = XLSTMConfig(d_model=32, n_heads=4)
+        p = slstm_block_init(KEY, cfg)
+        y, st_ = slstm_block_apply(p, jax.random.normal(KEY, (2, 12, 32)), cfg)
+        assert y.shape == (2, 12, 32) and not bool(jnp.any(jnp.isnan(y)))
+
+
+class TestGriffin:
+    def test_assoc_scan_matches_step(self):
+        cfg = RGLRUConfig(width=16)
+        p = rglru_init(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 20, 16))
+        y_scan, h_last = rglru_scan(p, x)
+        h = jnp.zeros((2, 16))
+        outs = []
+        for t in range(20):
+            o, h = rglru_step(p, x[:, t], h)
+            outs.append(o[:, None])
+        np.testing.assert_allclose(y_scan, jnp.concatenate(outs, axis=1), atol=1e-5)
+        np.testing.assert_allclose(h_last, h, atol=1e-5)
+
+    def test_block_decode_consistency(self):
+        cfg = RGLRUConfig(width=32)
+        p = griffin_block_init(KEY, 32, cfg)
+        x = jax.random.normal(KEY, (2, 12, 32))
+        full, _ = griffin_block_apply(p, x, cfg, state=griffin_init_state(2, cfg))
+        st_ = griffin_init_state(2, cfg)
+        outs = []
+        for t in range(12):
+            o, st_ = griffin_block_apply(p, x[:, t:t + 1], cfg, state=st_)
+            outs.append(o)
+        np.testing.assert_allclose(full, jnp.concatenate(outs, axis=1), atol=1e-4)
+
+    def test_rglru_decay_range_at_init(self):
+        cfg = RGLRUConfig(width=64)
+        p = rglru_init(KEY, cfg)
+        a_max = jnp.exp(-8.0 * jax.nn.softplus(p["lambda"]) * 0.0)
+        a_mid = jnp.exp(-8.0 * jax.nn.softplus(p["lambda"]) * 1.0)
+        assert float(a_max.min()) == 1.0
+        assert 0.85 <= float(a_mid.min()) and float(a_mid.max()) <= 0.9995
+
+
+class TestConv:
+    def test_causal_state_equivalence(self):
+        p = conv1d_init(KEY, 8, 4)
+        x = jax.random.normal(KEY, (2, 10, 8))
+        y_full, _ = conv1d_apply(p, x)
+        state = jnp.zeros((2, 3, 8))
+        outs = []
+        for t in range(10):
+            o, state = conv1d_apply(p, x[:, t:t + 1], state)
+            outs.append(o)
+        np.testing.assert_allclose(y_full, jnp.concatenate(outs, axis=1), atol=1e-5)

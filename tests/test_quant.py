@@ -1,0 +1,147 @@
+"""Property-based tests for the quantization substrate (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    MinMaxEstimator, MSEEstimator, PercentileEstimator, QConfig, QuantContext,
+    QuantSpec, RunningMinMaxEstimator, dequantize, fake_quant,
+    quantization_error, quantize, scale_zero_point,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _sz(x, spec):
+    return scale_zero_point(jnp.min(x), jnp.max(x), spec)
+
+
+class TestQuantizer:
+    @given(bits=st.sampled_from([4, 6, 8]), symmetric=st.booleans(),
+           seed=st.integers(0, 2 ** 16), scale=st.floats(0.01, 100.0))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_error_bounded_by_half_step(self, bits, symmetric, seed, scale):
+        """|x - fq(x)| <= s/2 for in-range values (Eq. 1 invariant)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * scale
+        spec = QuantSpec(bits=bits, symmetric=symmetric)
+        s, z = _sz(x, spec)
+        err = jnp.abs(x - fake_quant(x, s, z, spec))
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-6 * scale
+
+    @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=30, deadline=None)
+    def test_idempotent(self, bits, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+        spec = QuantSpec(bits=bits)
+        s, z = _sz(x, spec)
+        fq1 = fake_quant(x, s, z, spec)
+        fq2 = fake_quant(fq1, s, z, spec)
+        np.testing.assert_allclose(fq1, fq2, atol=1e-6)
+
+    @given(seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_dequantize_integer_grid(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3
+        spec = QuantSpec(bits=8)
+        s, z = _sz(x, spec)
+        q = quantize(x, s, z, spec)
+        assert q.dtype == jnp.int32
+        assert int(q.min()) >= 0 and int(q.max()) <= 255
+        np.testing.assert_allclose(
+            dequantize(q, s, z, spec), fake_quant(x, s, z, spec), atol=1e-6)
+
+    def test_out_of_range_values_clip(self):
+        x = jnp.array([-1.0, 0.0, 1.0])
+        spec = QuantSpec(bits=8)
+        s, z = scale_zero_point(jnp.float32(-1.0), jnp.float32(1.0), spec)
+        y = fake_quant(jnp.array([10.0]), s, z, spec)
+        assert float(y[0]) <= 1.0 + float(s)
+
+    def test_ste_gradient(self):
+        """Identity gradient in range, zero outside (straight-through)."""
+        x = jnp.array([-0.5, 0.0, 0.5, 100.0])
+        spec = QuantSpec(bits=8)
+        s, z = scale_zero_point(jnp.float32(-1.0), jnp.float32(1.0), spec)
+        g = jax.grad(lambda t: jnp.sum(fake_quant(t, s, z, spec)))(x)
+        np.testing.assert_allclose(g[:3], 1.0, atol=1e-6)
+        assert float(g[3]) == 0.0
+
+    def test_symmetric_grid_centered(self):
+        spec = QuantSpec(bits=8, symmetric=True)
+        s, z = scale_zero_point(jnp.float32(-2.0), jnp.float32(2.0), spec)
+        assert float(z) == 128
+        assert float(fake_quant(jnp.zeros(1), s, z, spec)[0]) == 0.0
+
+    def test_per_channel(self):
+        x = jnp.stack([jnp.linspace(-1, 1, 16), jnp.linspace(-10, 10, 16)])
+        spec = QuantSpec(bits=8, symmetric=True, per_channel_axis=0)
+        s, z = scale_zero_point(x.min(axis=1), x.max(axis=1), spec)
+        fq = fake_quant(x, s, z, spec)
+        err = jnp.abs(fq - x)
+        # channel 0 uses a 10x finer grid
+        assert float(err[0].max()) < float(err[1].max()) / 5
+
+
+class TestEstimators:
+    def test_minmax_exact(self):
+        est = MinMaxEstimator()
+        est.update(jnp.array([1.0, 5.0]))
+        est.update(jnp.array([-3.0, 2.0]))
+        lo, hi = est.finalize()
+        assert float(lo) == -3.0 and float(hi) == 5.0
+
+    def test_running_minmax_smooths(self):
+        est = RunningMinMaxEstimator(momentum=0.9)
+        for v in [1.0, 1.0, 100.0]:
+            est.update(jnp.array([0.0, v]))
+        _, hi = est.finalize()
+        assert float(hi) < 100.0   # the spike is EMA-damped
+
+    def test_percentile_robust_to_outliers(self):
+        x = np.concatenate([np.random.default_rng(0).normal(size=100000),
+                            np.array([1000.0])])
+        est = PercentileEstimator(percentile=99.9)
+        est.update(jnp.asarray(x))
+        lo, hi = est.finalize()
+        assert float(hi) < 10.0   # ignores the 1000.0 outlier
+
+    def test_mse_beats_minmax_on_outliers(self):
+        """MSE range search clips the outlier; min-max wastes the grid on it
+        (the trade-off from paper Sec 2)."""
+        x = jnp.concatenate([jax.random.normal(KEY, (4096,)),
+                             jnp.array([200.0])])
+        spec = QuantSpec(bits=8)
+        mm = MinMaxEstimator(); mm.update(x)
+        mse = MSEEstimator(spec); mse.update(x)
+        e_mm = quantization_error(x, *scale_zero_point(*mm.finalize(), spec), spec)
+        e_mse = quantization_error(x, *scale_zero_point(*mse.finalize(), spec), spec)
+        assert float(e_mse) < float(e_mm)
+
+
+class TestQuantContext:
+    def test_collect_then_apply(self):
+        qc = QConfig(weight_bits=8, act_bits=8)
+        ctx = QuantContext(qc, "collect")
+        x = jax.random.normal(KEY, (64,))
+        for _ in range(3):
+            ctx.act("layer0/mlp.in", x)
+        ctx.finalize()
+        y = ctx.act("layer0/mlp.in", x)
+        assert float(jnp.max(jnp.abs(y - x))) > 0  # actually quantized
+        assert float(jnp.max(jnp.abs(y - x))) < 0.1
+
+    def test_skip_patterns(self):
+        qc = QConfig(skip_patterns=(r".*lm_head.*",))
+        ctx = QuantContext(qc, "apply")
+        x = jax.random.normal(KEY, (8,))
+        np.testing.assert_array_equal(ctx.act("lm_head.in", x), x)
+
+    def test_weight_quant_on_the_fly(self):
+        qc = QConfig()
+        ctx = QuantContext(qc, "apply")
+        w = jax.random.normal(KEY, (32, 32))
+        wq = ctx.weight("layer0/q", w)
+        assert float(jnp.max(jnp.abs(wq - w))) > 0
+        assert float(jnp.max(jnp.abs(wq - w))) < 0.05

@@ -1,0 +1,162 @@
+"""Training loop, optimizer, checkpoint/restart (fault tolerance),
+microbatching equivalence, gradient compression."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.paper_models import opt_tiny
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.optim import (
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+    compress_grads, ef_init, linear_warmup_linear_decay,
+)
+from repro.train import (
+    LoopConfig, TrainTask, init_train_state, make_train_step, run_training,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_task(**kw):
+    cfg = opt_tiny(vocab=128, seq_len=32)
+    return TrainTask(cfg=cfg, loss_kind="clm",
+                     optimizer=AdamWConfig(lr=3e-3), **kw)
+
+
+def _data(vocab=128, seq=32, bs=4):
+    return SyntheticLM(SyntheticLMConfig(vocab_size=vocab, seq_len=seq,
+                                         batch_size=bs))
+
+
+class TestOptimizer:
+    def test_adamw_decreases_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=0.5, weight_decay=0.0, grad_clip_norm=None)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw_update(g, state, params, cfg)
+        np.testing.assert_allclose(params["w"], 0.0, atol=1e-2)
+
+    def test_weight_decay_mask(self):
+        params = {"l": {"w": jnp.ones(3), "b": jnp.ones(3)},
+                  "ln": {"scale": jnp.ones(3)}}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=1e-2, weight_decay=1.0, grad_clip_norm=None)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(zeros, state, params, cfg)
+        assert float(new["l"]["w"][0]) < 1.0       # decayed
+        assert float(new["l"]["b"][0]) == 1.0      # masked
+        assert float(new["ln"]["scale"][0]) == 1.0 # masked
+        # paper App. B.3: LN-gamma decay switch
+        cfg2 = dataclasses.replace(cfg, decay_norm_scales=True)
+        new2, _, _ = adamw_update(zeros, state, params, cfg2)
+        assert float(new2["ln"]["scale"][0]) < 1.0
+
+    def test_grad_clip(self):
+        g = {"w": jnp.full((4,), 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule(self):
+        f = linear_warmup_linear_decay(10, 100)
+        assert float(f(0)) == 0.0
+        assert float(f(10)) == pytest.approx(1.0)
+        assert float(f(100)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_compression_error_feedback(self):
+        """Error feedback conserves mass exactly: emitted + residual equals
+        the sum of inputs (what int8 drops is never lost), and components
+        above the quantization step are transmitted accurately."""
+        g = {"w": jnp.array([1e-6, 1.0, -0.5])}
+        ef = ef_init(g)
+        acc = jnp.zeros(3)
+        for _ in range(50):
+            deq, ef = compress_grads(g, ef)
+            acc = acc + deq["w"]
+        np.testing.assert_allclose(acc + ef.residual["w"], 50 * g["w"],
+                                   rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(acc[1:] / 50, g["w"][1:], rtol=0.02)
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        out = run_training(_tiny_task(), _data(), LoopConfig(
+            total_steps=40, eval_every=20, eval_batches=2, log_every=0))
+        h = out["history"]
+        assert h["eval_ppl"][-1] < h["eval_ppl"][0]
+
+    def test_microbatch_equivalence(self):
+        t1 = _tiny_task()
+        t2 = _tiny_task(microbatch=2)
+        s1 = init_train_state(KEY, t1)
+        s2 = init_train_state(KEY, t2)
+        batch = jax.tree_util.tree_map(jnp.asarray, _data(bs=4).batch(0))
+        s1n, m1 = jax.jit(make_train_step(t1))(s1, batch)
+        s2n, m2 = jax.jit(make_train_step(t2))(s2, batch)
+        a = jax.tree_util.tree_leaves(s1n.params)[0]
+        b = jax.tree_util.tree_leaves(s2n.params)[0]
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+    def test_grad_compress_step_runs(self):
+        t = _tiny_task(grad_compress=True)
+        s = init_train_state(KEY, t)
+        batch = jax.tree_util.tree_map(jnp.asarray, _data().batch(0))
+        s, m = jax.jit(make_train_step(t))(s, batch)
+        assert np.isfinite(float(m["loss"]))
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_keep_k(self):
+        task = _tiny_task()
+        state = init_train_state(KEY, task)
+        with tempfile.TemporaryDirectory() as d:
+            for s in (5, 10, 15, 20):
+                save_checkpoint(d, s, state, keep=2)
+            names = sorted(os.listdir(d))
+            assert names == ["step_00000015", "step_00000020"]
+            restored, step = restore_checkpoint(d, state)
+            assert step == 20
+            np.testing.assert_allclose(
+                jax.tree_util.tree_leaves(state.params)[0],
+                jax.tree_util.tree_leaves(restored.params)[0])
+
+    def test_structure_mismatch_rejected(self):
+        task = _tiny_task()
+        state = init_train_state(KEY, task)
+        other = init_train_state(
+            KEY, TrainTask(cfg=opt_tiny(vocab=64, seq_len=32)))
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, state)
+            with pytest.raises(ValueError):
+                restore_checkpoint(d, other)
+
+    def test_no_partial_checkpoint_visible(self):
+        """Atomic commit: only fully-renamed step dirs count."""
+        task = _tiny_task()
+        state = init_train_state(KEY, task)
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 7, state)
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))
+            assert latest_step(d) == 7
+
+    def test_resume_continues_training(self):
+        """Kill-and-restart: the loop resumes from the saved step."""
+        task = _tiny_task()
+        with tempfile.TemporaryDirectory() as d:
+            loop = LoopConfig(total_steps=10, eval_every=0, log_every=0,
+                              ckpt_every=5, ckpt_dir=d)
+            run_training(task, _data(), loop)
+            assert latest_step(d) == 10
+            # restart with a longer horizon: resumes at 10, not 0
+            loop2 = LoopConfig(total_steps=12, eval_every=0, log_every=0,
+                               ckpt_every=5, ckpt_dir=d)
+            out = run_training(task, _data(), loop2)
+            assert int(out["state"].step) == 12
