@@ -1,0 +1,99 @@
+"""Serving throughput: decode tokens/sec vs batch size for the paper's
+three attention variants (vanilla, clipped softmax, gated attention) on the
+fused decode engine, plus a continuous-batching run with staggered request
+lengths — the Table 11-style serving companion: the paper's methods must
+not cost decode throughput.
+
+Two measurements per (method, batch):
+  * ``generate``           — one jitted lax.while_loop for the whole decode;
+  * ``ContinuousBatcher``  — per-slot positions, every active slot decodes
+    every tick (throughput scales with active slots, not cohort size).
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py
+Scale with REPRO_BENCH_STEPS (default 200 -> max_new_tokens 32).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import apply_method
+from repro.configs.paper_models import opt_tiny
+from repro.models import model_init
+from repro.serving import ContinuousBatcher, GenerateConfig, Request, generate
+
+VOCAB = 256
+PROMPT_LEN = 8
+MAX_NEW = max(int(os.environ.get("REPRO_BENCH_STEPS", "200")) // 6, 8)
+BATCHES = (1, 2, 4, 8)
+
+METHODS = [
+    ("vanilla", None, {}),
+    ("clipped_softmax", "clipped_softmax", {"alpha": 4.0}),
+    ("gated_attention", "gated_attention", {"pi_init": 0.5}),
+]
+
+
+def make(method, kwargs):
+    cfg = opt_tiny(vocab=VOCAB, seq_len=64)
+    if method is not None:
+        cfg = apply_method(cfg, method, **kwargs)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def bench_generate(cfg, params, b: int, reps: int = 3) -> float:
+    gen = GenerateConfig(max_new_tokens=MAX_NEW)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, PROMPT_LEN), 4, VOCAB)
+    generate(params, cfg, prompts, gen).block_until_ready()   # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        generate(params, cfg, prompts, gen).block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return b * MAX_NEW / dt
+
+
+def bench_batcher(cfg, params, b: int, n_req: int = None) -> float:
+    n_req = n_req or 2 * b
+    rng = np.random.default_rng(0)
+    reqs = [(i,
+             rng.integers(4, VOCAB, size=int(rng.integers(4, PROMPT_LEN + 1))
+                          ).astype(np.int32),
+             int(rng.integers(MAX_NEW // 2, MAX_NEW + 1)))
+            for i in range(n_req)]
+    batcher = ContinuousBatcher(params, cfg, batch_size=b,
+                                max_len=PROMPT_LEN + MAX_NEW + 8)
+    # warm-up pass over the same request mix compiles every prefill/decode
+    # shape on this batcher's jit cache, so the timed pass measures serving
+    # throughput, not XLA compilation (mirrors bench_generate)
+    for warm in (True, False):
+        for uid, prompt, mnt in reqs:
+            batcher.submit(Request(uid=uid, prompt=prompt.copy(),
+                                   max_new_tokens=mnt))
+        if warm:
+            batcher.run()
+            batcher.done.clear()
+        else:
+            t0 = time.perf_counter()
+            done = batcher.run()
+            dt = time.perf_counter() - t0
+    return sum(len(r.output) for r in done) / dt
+
+
+def main() -> None:
+    print(f"decode throughput, max_new_tokens={MAX_NEW}, prompt={PROMPT_LEN}")
+    print("method,batch,generate_tok_s,batcher_tok_s")
+    for name, method, kwargs in METHODS:
+        cfg, params = make(method, kwargs)
+        for b in BATCHES:
+            g = bench_generate(cfg, params, b)
+            s = bench_batcher(cfg, params, b)
+            print(f"{name},{b},{g:.1f},{s:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Continuous-batching serving demo: requests of different lengths stream
 through a fixed slot pool; finished slots refill from the queue without
-draining the batch.
+draining the batch. Every active slot decodes on every tick at its own
+position (per-row cache scatter) — no lockstep cohorts — and requests stop
+early at EOS.
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -14,12 +16,15 @@ from repro.configs.paper_models import opt_tiny
 from repro.models import model_init
 from repro.serving import ContinuousBatcher, Request
 
+EOS_ID = 5          # synthetic EOS: some requests will emit it mid-stream
+
 
 def main() -> None:
     cfg = apply_method(opt_tiny(vocab=256, seq_len=64), "clipped_softmax",
                        alpha=4.0)
     params = model_init(jax.random.PRNGKey(0), cfg)
-    batcher = ContinuousBatcher(params, cfg, batch_size=4, max_len=64)
+    batcher = ContinuousBatcher(params, cfg, batch_size=4, max_len=64,
+                                eos_id=EOS_ID)
 
     rng = np.random.default_rng(0)
     n_req = 10
@@ -43,7 +48,8 @@ def main() -> None:
           f"{total_tokens} tokens in {dt:.1f}s over {ticks} ticks "
           f"({total_tokens/dt:.1f} tok/s)")
     for r in sorted(batcher.done, key=lambda r: r.uid)[:3]:
-        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.output.tolist()}")
+        stop = "EOS" if len(r.output) and r.output[-1] == EOS_ID else "budget"
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.output.tolist()} ({stop})")
 
 
 if __name__ == "__main__":

@@ -35,14 +35,23 @@ def main() -> None:
     ctx = calibrate(apply_fn, params, cal, QConfig(), 4)
     print(f"calibrated {len(ctx.ranges)} activation sites")
 
-    # batched generation (FP path)
+    # batched generation (FP path) — one fused jitted decode loop
     prompts = jnp.asarray(data.batch(99)["tokens"][:, :16])
     t0 = time.perf_counter()
     out = generate(params, cfg, prompts, GenerateConfig(max_new_tokens=16))
     dt = time.perf_counter() - t0
     n_new = out.shape[0] * 16
     print(f"generated {out.shape} in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s batched)")
+          f"({n_new / dt:.1f} tok/s batched, greedy)")
+
+    # sampling path: temperature + top-k, early EOS with padding
+    out_s = generate(params, cfg, prompts,
+                     GenerateConfig(max_new_tokens=16, temperature=0.8,
+                                    top_k=20, eos_id=5),
+                     key=jax.random.PRNGKey(42))
+    stopped = int((out_s[:, 16:] == 5).any(axis=1).sum())
+    print(f"sampled top-k=20 T=0.8: {out_s.shape}, "
+          f"{stopped}/{out_s.shape[0]} rows hit EOS early")
 
     # hardware-exact int8 matmul on the LM head (the op the paper's method
     # makes safe): compare against the float head

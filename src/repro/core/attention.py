@@ -60,17 +60,20 @@ def make_attention_mask(
     kv_len: int,
     causal: bool,
     window: Optional[int] = None,
-    q_offset: int = 0,
+    q_offset=0,
     dtype=jnp.bool_,
 ) -> Array:
-    """(q_len, kv_len) boolean mask, True = may attend.
+    """Boolean attention mask, True = may attend.
 
     ``q_offset`` positions the query block inside the full sequence — used
-    both by chunked attention and by decode (q_offset = cache position).
+    both by chunked attention and by decode (q_offset = cache position). It
+    may be a scalar (shared position, returns (q_len, kv_len)) or a per-row
+    (B,) vector (slot-pool decode, returns (B, q_len, kv_len)).
     """
-    q_pos = jnp.arange(q_len)[:, None] + q_offset
-    k_pos = jnp.arange(kv_len)[None, :]
-    mask = jnp.ones((q_len, kv_len), dtype=jnp.bool_)
+    off = jnp.asarray(q_offset, jnp.int32)
+    q_pos = (off[..., None] + jnp.arange(q_len))[..., :, None]   # (..., Tq, 1)
+    k_pos = jnp.arange(kv_len)                                   # (Tk,)
+    mask = jnp.ones(q_pos.shape[:-1] + (kv_len,), dtype=jnp.bool_)
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
@@ -101,12 +104,13 @@ def dense_attention(
     v: Array,
     cfg: AttentionConfig,
     mask: Optional[Array] = None,
-    q_offset: int = 0,
+    q_offset=0,
     gate_pi: Optional[Array] = None,
 ) -> Array:
     """Reference attention. Returns (B, Tq, Hq, Dh).
 
-    ``mask``: optional (Tq, Tk) or (B, 1, Tq, Tk)-broadcastable boolean.
+    ``mask``: optional (Tq, Tk) shared or (B, Tq, Tk) per-row boolean.
+    ``q_offset``: scalar or per-row (B,) query offset (slot-pool decode).
     ``gate_pi``: optional (B, Tq, Hq) gating probabilities (paper Eq. 5).
     """
     b, tq, hq, d = q.shape
@@ -114,7 +118,9 @@ def dense_attention(
     logits = attention_logits(q, k, cfg)               # (B, Hkv, G, Tq, Tk)
     if mask is None:
         mask = make_attention_mask(tq, tk, cfg.causal, cfg.window, q_offset)
-    mask_b = jnp.broadcast_to(mask.astype(jnp.bool_), logits.shape) if mask.ndim == 2 else mask
+    if mask.ndim == 3:                                 # per-row (B, Tq, Tk)
+        mask = mask[:, None, None]
+    mask_b = jnp.broadcast_to(mask.astype(jnp.bool_), logits.shape) if mask.ndim < 5 else mask
 
     sm = cfg.softmax
     if sm.is_vanilla:
@@ -133,7 +139,26 @@ def dense_attention(
     return out
 
 
-def _online_pass(q, k, v, cfg: AttentionConfig, q_offset: int) -> Tuple[Array, Array, Array]:
+def _chunk_mask(idx, c, tk, tq, q_offset, cfg: AttentionConfig) -> Array:
+    """Validity mask of one KV chunk: (Tq, c) for a scalar ``q_offset``,
+    (B, Tq, c) for a per-row vector offset."""
+    off = jnp.asarray(q_offset, jnp.int32)
+    q_pos = (off[..., None] + jnp.arange(tq))[..., :, None]      # (..., Tq, 1)
+    k_pos = idx * c + jnp.arange(c)
+    mask = jnp.broadcast_to(k_pos < tk, q_pos.shape[:-1] + (c,))  # padding
+    if cfg.causal:
+        mask &= k_pos <= q_pos
+    if cfg.window is not None:
+        mask &= k_pos > q_pos - cfg.window
+    return mask
+
+
+def _lift_mask(mask: Array) -> Array:
+    """Lift a (Tq, c) / (B, Tq, c) mask against (B, Hkv, G, Tq, c) logits."""
+    return mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+
+
+def _online_pass(q, k, v, cfg: AttentionConfig, q_offset) -> Tuple[Array, Array, Array]:
     """1-pass online softmax over KV chunks. Returns (acc, m, z) where
     acc = sum exp(s - m) v, per query. Shapes:
       acc (B, Hkv, G, Tq, D); m, z (B, Hkv, G, Tq)."""
@@ -156,14 +181,8 @@ def _online_pass(q, k, v, cfg: AttentionConfig, q_offset: int) -> Tuple[Array, A
         kb, vb, idx = blk
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
         s = softcap(s, cfg.logit_softcap)
-        k_pos = idx * c + jnp.arange(c)[None, :]
-        q_pos = jnp.arange(tq)[:, None] + q_offset
-        mask = k_pos < tk  # padding
-        if cfg.causal:
-            mask &= k_pos <= q_pos
-        if cfg.window is not None:
-            mask &= k_pos > q_pos - cfg.window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = _chunk_mask(idx, c, tk, tq, q_offset, cfg)
+        s = jnp.where(_lift_mask(mask), s, NEG_INF)
         m_blk = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m, m_blk)
         corr = jnp.exp(m - m_new)
@@ -185,7 +204,7 @@ def _online_pass(q, k, v, cfg: AttentionConfig, q_offset: int) -> Tuple[Array, A
     return acc, m, z
 
 
-def _clipped_second_pass(q, k, v, m, z, cfg: AttentionConfig, q_offset: int) -> Array:
+def _clipped_second_pass(q, k, v, m, z, cfg: AttentionConfig, q_offset) -> Array:
     """Pass 2 for clipped softmax: accumulate clip((z-g)·p + g)·V blockwise."""
     b, tq, hq, d = q.shape
     g = cfg.group_size
@@ -208,16 +227,10 @@ def _clipped_second_pass(q, k, v, m, z, cfg: AttentionConfig, q_offset: int) -> 
         kb, vb, idx = blk
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
         s = softcap(s, cfg.logit_softcap)
-        k_pos = idx * c + jnp.arange(c)[None, :]
-        q_pos = jnp.arange(tq)[:, None] + q_offset
-        mask = k_pos < tk
-        if cfg.causal:
-            mask &= k_pos <= q_pos
-        if cfg.window is not None:
-            mask &= k_pos > q_pos - cfg.window
+        mask = _chunk_mask(idx, c, tk, tq, q_offset, cfg)
         p = jnp.exp(s - m[..., None]) / z_safe[..., None]
         p = stretch_and_clip(p, gamma, zeta)
-        p = jnp.where(mask[None, None, None], p, 0.0)
+        p = jnp.where(_lift_mask(mask), p, 0.0)
         return acc + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32)), None
 
     acc0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
@@ -230,7 +243,7 @@ def chunked_attention(
     k: Array,
     v: Array,
     cfg: AttentionConfig,
-    q_offset: int = 0,
+    q_offset=0,
     gate_pi: Optional[Array] = None,
 ) -> Array:
     """Flash-style O(T)-memory attention with vanilla OR clipped softmax."""
@@ -251,7 +264,7 @@ def attention(
     k: Array,
     v: Array,
     cfg: AttentionConfig,
-    q_offset: int = 0,
+    q_offset=0,
     gate_pi: Optional[Array] = None,
     force_dense: bool = False,
 ) -> Array:

@@ -156,6 +156,28 @@ class ModelConfig:
 
 
 # ==========================================================================
+# Decode positions
+# ==========================================================================
+def _positions(pos, t: int) -> Array:
+    """Absolute positions of a length-``t`` block: (T,) for a scalar ``pos``,
+    (B, T) when ``pos`` is a per-row (B,) vector (slot-pool decode)."""
+    p = jnp.asarray(pos, jnp.int32)
+    return p[..., None] + jnp.arange(t, dtype=jnp.int32)
+
+
+def _row_select(active: Array, new, old):
+    """Keep ``new`` state only for rows where ``active`` is True. Used for
+    decode states without a positional write index (recurrent h, conv tail)
+    where a masked scatter does not apply."""
+    def sel(n, o):
+        if n is None:
+            return n
+        m = active.reshape(active.shape[0], *([1] * (n.ndim - 1)))
+        return jnp.where(m, n, o.astype(n.dtype))
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+# ==========================================================================
 # Block init / apply
 # ==========================================================================
 def _attn_block_init(key: Array, cfg: ModelConfig, kind: str) -> Params:
@@ -217,6 +239,7 @@ def _attn_block_apply(
     rope: Optional[Tuple[Array, Array]],
     cache: Optional[dict], pos,
     ctx: QuantContext, name: str,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     """Returns (x_out, new_cache, attn_layer_output, moe_aux); the attention
     layer output is the tensor whose outliers the paper measures."""
@@ -248,7 +271,29 @@ def _attn_block_apply(
         v = maybe_constrain(v, "dp", None, None, "tp")
         cache_len = cache["k"].shape[1]
         is_ring = "pos_ids" in cache
-        if is_ring:
+        per_row = jnp.ndim(pos) >= 1      # per-slot positions (decode engine)
+        if per_row:
+            # Masked per-row scatter: each row b writes its block at its own
+            # position pos[b]; inactive rows are redirected out of bounds and
+            # dropped — no write, no double-buffer restore needed.
+            tpos = _positions(pos, t)                                # (B, T)
+            widx = tpos % cache_len if is_ring else tpos
+            if active is not None:
+                widx = jnp.where(active[:, None], widx, cache_len)
+            bidx = jnp.arange(b)[:, None]
+            k_cache = cache["k"].at[bidx, widx].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[bidx, widx].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k_cache, "v": v_cache}
+            if is_ring:
+                pos_ids = cache["pos_ids"].at[bidx, widx].set(tpos, mode="drop")
+                new_cache["pos_ids"] = pos_ids
+                kp = pos_ids[:, None, :]                             # (B, 1, L)
+                q_pos = tpos[:, :, None]                             # (B, T, 1)
+                explicit_mask = (kp >= 0) & (kp <= q_pos) & (kp > q_pos - cfg.window)
+                acfg = dataclasses.replace(acfg, causal=False, window=None)
+        elif is_ring:
             # ring buffer holding the last `window` tokens (decode, t == 1)
             slot = pos % cache_len
             k_cache = jax.lax.dynamic_update_slice_in_dim(
@@ -256,10 +301,12 @@ def _attn_block_apply(
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
             pos_ids = jax.lax.dynamic_update_slice_in_dim(
-                cache["pos_ids"], jnp.arange(t, dtype=jnp.int32) + pos, slot, axis=0)
+                cache["pos_ids"],
+                jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32) + pos, (b, t)),
+                slot, axis=1)
             new_cache = {"k": k_cache, "v": v_cache, "pos_ids": pos_ids}
-            q_pos = (pos + jnp.arange(t))[:, None]
-            kp = pos_ids[None, :]
+            q_pos = (pos + jnp.arange(t))[None, :, None]             # (1, T, 1)
+            kp = pos_ids[:, None, :]                                 # (B, 1, L)
             explicit_mask = (kp >= 0) & (kp <= q_pos) & (kp > q_pos - cfg.window)
             acfg = dataclasses.replace(acfg, causal=False, window=None)
         else:
@@ -325,12 +372,16 @@ def _zero_aux():
 def _block_apply(
     p: Params, x: Array, cfg: ModelConfig, kind: str,
     rope, cache, pos, ctx: QuantContext, name: str,
+    active: Optional[Array] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     if kind in ("attn", "local_attn"):
-        return _attn_block_apply(p, x, cfg, kind, rope, cache, pos, ctx, name)
+        return _attn_block_apply(p, x, cfg, kind, rope, cache, pos, ctx, name,
+                                 active=active)
     if kind == "griffin":
         h = norm_apply(cfg.norm, p["ln1"], x, ctx, name + "/ln1")
         y, new_state = griffin_block_apply(p["griffin"], h, cfg.rglru, cache, ctx, name + "/griffin")
+        if active is not None and cache is not None:
+            new_state = _row_select(active, new_state, cache)
         x = x + y
         mix_out = x
         h2 = norm_apply(cfg.norm, p["ln2"], x, ctx, name + "/ln2")
@@ -340,6 +391,8 @@ def _block_apply(
         h = norm_apply(cfg.norm, p["ln"], x, ctx, name + "/ln")
         fn = mlstm_block_apply if kind == "mlstm" else slstm_block_apply
         y, new_state = fn(p["blk"], h, cfg.xlstm, cache, ctx, name + f"/{kind}")
+        if active is not None and cache is not None:
+            new_state = _row_select(active, new_state, cache)
         x = x + y
         return x, new_state, x, _zero_aux()
     raise ValueError(kind)
@@ -401,7 +454,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                 "v": jnp.zeros((batch, length, hkv, dh), dtype),
             }
             if kind == "local_attn" and cfg.window and length < cfg.max_seq_len:
-                c["pos_ids"] = jnp.full((length,), -1, jnp.int32)
+                # per-row ring positions: slots decode at different offsets
+                c["pos_ids"] = jnp.full((batch, length), -1, jnp.int32)
             return c
         if kind == "griffin":
             return griffin_init_state(batch, cfg.rglru, dtype)
@@ -438,7 +492,7 @@ def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
     x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
     if cfg.pos == "learned":
         t = x.shape[1]
-        positions = pos + jnp.arange(t)
+        positions = _positions(pos, t)        # (T,) or per-row (B, T)
         x = x + positional_embedding_apply(params["pos_embed"], positions).astype(x.dtype)
     return x
 
@@ -450,12 +504,18 @@ def model_apply(
     ctx: QuantContext = NO_QUANT,
     cache: Optional[Params] = None,
     pos: Any = 0,
+    active: Optional[Array] = None,
     collect_acts: bool = False,
 ) -> Tuple[Array, Dict[str, Any]]:
     """Forward pass.
 
     batch: {"tokens": (B,T) int32} and/or {"embeds": (B,T,F)}.
     cache/pos: decode state; pass T=1 (or prefill chunk) with a cache.
+    ``pos`` may be a shared scalar or a per-row (B,) vector (slot-pool
+    decode); with a vector, cache writes scatter per row. ``active`` is an
+    optional (B,) bool mask: rows with ``active=False`` still compute (their
+    logits are garbage) but their cache/state writes are dropped — the
+    masked-write contract the continuous batcher relies on.
     Returns (logits (B,T,vocab) f32, aux) where aux may contain
     "attn_outputs" (stacked per-layer residual values) and "cache".
     """
@@ -464,7 +524,7 @@ def model_apply(
 
     rope = None
     if cfg.pos == "rope":
-        positions = pos + jnp.arange(t)
+        positions = _positions(pos, t)        # (T,) or per-row (B, T)
         rope = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
 
     aux: Dict[str, Any] = {}
@@ -477,7 +537,7 @@ def model_apply(
         for i, kind in enumerate(cfg.pattern):
             c = None if gcache is None else gcache[f"b{i}"]
             x, nc, a, ba = _block_apply(gparams[f"b{i}"], x, cfg, kind, rope, c, pos,
-                                        ctx, f"layer_{kind}{i}")
+                                        ctx, f"layer_{kind}{i}", active=active)
             new_gcache[f"b{i}"] = nc
             gacts.append(a)
             gaux = {k: gaux[k] + ba[k] for k in gaux}
@@ -529,7 +589,7 @@ def model_apply(
         for i, kind in enumerate(cfg.tail_pattern):
             c = None if cache is None else cache["tail"][f"t{i}"]
             x, nc, a, ta = _block_apply(params["tail"][f"t{i}"], x, cfg, kind, rope, c,
-                                        pos, ctx, f"tail_{kind}{i}")
+                                        pos, ctx, f"tail_{kind}{i}", active=active)
             aux["moe_aux"] = {k: aux.get("moe_aux", _zero_aux())[k] + ta[k]
                               for k in ta}
             tcache_new[f"t{i}"] = nc

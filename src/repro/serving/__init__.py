@@ -1,6 +1,13 @@
-from repro.serving.decode import GenerateConfig, decode_one, generate, prefill
+from repro.serving.decode import (
+    GenerateConfig,
+    decode_one,
+    generate,
+    prefill,
+    sample_logits,
+)
 
-__all__ = ["GenerateConfig", "decode_one", "generate", "prefill"]
+__all__ = ["GenerateConfig", "decode_one", "generate", "prefill",
+           "sample_logits"]
 from repro.serving.scheduler import ContinuousBatcher, Request  # noqa: E402
 
 __all__ += ["ContinuousBatcher", "Request"]

@@ -1,11 +1,18 @@
-"""Batched serving: prefill + greedy/temperature decode with a static KV
-cache. ``generate`` drives (prefill_step, decode_step) — the same functions
-the decode_* dry-run cells lower.
+"""Fused serving decode: prefill + a fully-jitted token-generation loop.
+
+``generate`` runs the whole decode as ONE compiled program — a
+``lax.while_loop`` that samples (greedy / temperature / top-k), honors
+``eos_id`` with a per-row finished mask (later positions are padded with
+``pad_id``), and early-exits once every row is finished. There is no
+per-token python dispatch; (prefill, decode) are the same functions the
+decode_* dry-run cells lower, and ``decode_one`` accepts per-row positions
+plus an active mask so the continuous batcher shares the exact same step.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +26,22 @@ Array = jax.Array
 class GenerateConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0       # 0 => greedy
-    eos_id: Optional[int] = None
+    top_k: Optional[int] = None    # sample only among the k best logits
+    eos_id: Optional[int] = None   # a row stops after emitting this token
+    pad_id: int = 0                # fills positions after EOS
+
+
+def sample_logits(logits: Array, gen: GenerateConfig,
+                  key: Optional[Array] = None) -> Array:
+    """(B, vocab) logits -> (B,) int32 token ids."""
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("sample_logits needs a PRNG key when temperature > 0")
+    if gen.top_k is not None and 0 < gen.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, gen.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits / gen.temperature).astype(jnp.int32)
 
 
 def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
@@ -33,34 +55,64 @@ def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
     return logits[:, -1, :], aux["cache"], t
 
 
-def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos):
+def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos,
+               active: Optional[Array] = None):
+    """One decode step. ``pos`` is a shared scalar or per-row (B,) vector;
+    ``active`` masks cache writes of dead rows (see model_apply)."""
     logits, aux = model_apply(params, cfg, {"tokens": tokens},
-                              cache=cache, pos=pos)
+                              cache=cache, pos=pos, active=active)
     return logits[:, -1, :], aux["cache"]
+
+
+@partial(jax.jit, static_argnums=(1, 4))
+def _decode_loop(params, cfg: ModelConfig, cache, last_logits,
+                 gen: GenerateConfig, pos, key):
+    """Jitted whole-loop decode: returns ((B, max_new_tokens) tokens, cache).
+
+    Token 0 comes from the prefill logits; each loop iteration decodes then
+    samples, so no forward pass is wasted on the final token. The finished
+    mask makes rows emit ``pad_id`` after EOS and the loop exits early once
+    every row is done (EOS/length masking)."""
+    b = last_logits.shape[0]
+    n = gen.max_new_tokens
+    if n == 0:
+        return jnp.zeros((b, 0), jnp.int32), cache
+    key, sub = jax.random.split(key)
+    tok = sample_logits(last_logits, gen, sub)
+    finished = tok == gen.eos_id if gen.eos_id is not None \
+        else jnp.zeros((b,), jnp.bool_)
+    buf = jnp.full((b, n), gen.pad_id, jnp.int32).at[:, 0].set(tok)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def cond(state):
+        i, _, _, finished, _, _ = state
+        return (i < n) & ~jnp.all(finished)
+
+    def body(state):
+        i, key, tok, finished, cache, buf = state
+        logits, cache = decode_one(params, cfg, cache, tok[:, None],
+                                   pos + i - 1)
+        key, sub = jax.random.split(key)
+        nxt = sample_logits(logits, gen, sub)
+        if gen.eos_id is not None:
+            nxt = jnp.where(finished, gen.pad_id, nxt)
+            finished = finished | (nxt == gen.eos_id)
+        buf = buf.at[:, i].set(nxt)
+        return (i + 1, key, nxt, finished, cache, buf)
+
+    state = (jnp.asarray(1, jnp.int32), key, tok, finished, cache, buf)
+    _, _, _, _, cache, buf = jax.lax.while_loop(cond, body, state)
+    return buf, cache
 
 
 def generate(params, cfg: ModelConfig, prompt: Array, gen: GenerateConfig,
              key: Optional[Array] = None) -> Array:
-    """Greedy/temperature sampling. prompt: (B, T) int32. Returns
-    (B, T + max_new_tokens)."""
-    b, t = prompt.shape
+    """Greedy/temperature/top-k sampling. prompt: (B, T) int32. Returns
+    (B, T + max_new_tokens); rows that emit ``gen.eos_id`` keep it and are
+    padded with ``gen.pad_id`` afterwards."""
+    t = prompt.shape[1]
     max_len = t + gen.max_new_tokens
     last_logits, cache, pos = prefill(params, cfg, prompt, max_len)
-    decode = jax.jit(decode_one, static_argnums=(1,))
-
-    def sample(logits, k):
-        if gen.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, logits / gen.temperature).astype(jnp.int32)
-
     key = key if key is not None else jax.random.PRNGKey(0)
-    toks = [prompt]
-    cur = sample(last_logits, key)[:, None]
-    for i in range(gen.max_new_tokens - 1):
-        toks.append(cur)
-        key, sub = jax.random.split(key)
-        logits, cache = decode(params, cfg, cache, cur, pos)
-        pos = pos + 1
-        cur = sample(logits, sub)[:, None]
-    toks.append(cur)
-    return jnp.concatenate(toks, axis=1)
+    new_tokens, _ = _decode_loop(params, cfg, cache, last_logits, gen, pos, key)
+    return jnp.concatenate([prompt, new_tokens], axis=1)

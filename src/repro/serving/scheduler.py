@@ -1,11 +1,14 @@
-"""Continuous-batching request scheduler for the decode path.
+"""Continuous-batching request scheduler over a fused per-slot decode step.
 
 Real serving stacks (vLLM/JetStream-style) keep the decode batch full by
 slotting new requests into finished sequences' cache rows instead of
 waiting for the whole batch to drain. This is the jax-native equivalent:
 
   * a fixed-shape slot pool (batch B, max_len L) holds the KV cache;
-  * each step decodes every active slot (one fused decode_step);
+  * every tick decodes EVERY active slot in one fused jitted step, each row
+    at its own position (per-row scatter cache writes — no lockstep
+    cohorts, no double-buffer restore of idle rows: inactive rows' writes
+    are masked out inside the kernel);
   * finished slots (EOS or length budget) are refilled from the queue by
     running a per-slot prefill into the shared cache row.
 
@@ -16,7 +19,7 @@ pod-sharded cache (slots = batch rows, already sharded over dp).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +47,11 @@ class _Slot:
 
 
 class ContinuousBatcher:
-    """Slot-pool scheduler over a shared static KV cache."""
+    """Slot-pool scheduler over a shared static KV cache.
+
+    Device state per slot row: KV cache, next position and last sampled
+    token; one jitted decode advances all active rows per tick regardless
+    of their (generally different) positions."""
 
     def __init__(self, params, cfg: ModelConfig, batch_size: int,
                  max_len: int, eos_id: Optional[int] = None) -> None:
@@ -58,14 +65,14 @@ class ContinuousBatcher:
         self.queue: List[Request] = []
         self.done: List[Request] = []
 
-        def _decode(params, cache, tokens, pos_vec):
-            # per-slot positions: run with the max pos and mask via causal
-            # offsets is incorrect for mixed positions, so decode uses a
-            # shared position per step; slots therefore decode in lockstep
-            # cohorts (same pos) — we group by pos below.
+        def _decode(params, cache, tokens, pos, active):
+            # one fused step: every row decodes at its own position; writes
+            # of inactive rows are dropped inside model_apply (masked
+            # per-row scatter), so idle cache rows are never clobbered.
             logits, aux = model_apply(params, cfg, {"tokens": tokens},
-                                      cache=cache, pos=pos_vec)
-            return jnp.argmax(logits[:, -1, :], axis=-1), aux["cache"]
+                                      cache=cache, pos=pos, active=active)
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return next_tok, aux["cache"]
 
         self._decode = jax.jit(_decode)
 
@@ -91,17 +98,22 @@ class ContinuousBatcher:
                 {"tokens": jnp.asarray(req.prompt)[None, :]},
                 cache=single, pos=0)
 
-            def insert(pool_leaf, row_leaf):
-                if row_leaf is not None and pool_leaf.ndim >= 1 and \
-                        row_leaf.shape[:1] == (1,) and \
-                        pool_leaf.shape[0] == self.B:
-                    return pool_leaf.at[i].set(row_leaf[0])
-                return pool_leaf  # batch-free leaves (e.g. ring pos_ids)
+            def insert(path, pool_leaf, row_leaf):
+                # scanned caches stack layer groups in front: (G, B, L, ...)
+                ax = 1 if path and path[0] == jax.tree_util.DictKey("groups") \
+                    else 0
+                if row_leaf is not None and pool_leaf.ndim > ax and \
+                        row_leaf.shape[ax] == 1 and \
+                        pool_leaf.shape[ax] == self.B:
+                    dst = (slice(None),) * ax + (i,)
+                    src = (slice(None),) * ax + (0,)
+                    return pool_leaf.at[dst].set(row_leaf[src])
+                return pool_leaf  # batch-free leaves
 
-            self.cache = jax.tree_util.tree_map(insert, self.cache,
-                                                aux["cache"])
-            self.slots[i] = _Slot(req=req, pos=t,
-                                  generated=[int(jnp.argmax(logits[0, -1]))])
+            self.cache = jax.tree_util.tree_map_with_path(
+                insert, self.cache, aux["cache"])
+            first = int(jnp.argmax(logits[0, -1]))
+            self.slots[i] = _Slot(req=req, pos=t, generated=[first])
 
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
@@ -116,45 +128,33 @@ class ContinuousBatcher:
                 self.slots[i] = _Slot()
 
     def step(self) -> int:
-        """One scheduler tick: admit, decode one token for the active
-        cohort, retire. Returns number of active slots."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
+        """One scheduler tick: admit, decode one token for EVERY active
+        slot, retire. Returns number of active slots."""
+        # a prefill's first token may already satisfy EOS or the budget;
+        # retire-and-refill until the slot set is stable before decoding
+        while True:
+            self._admit()
+            n_done = len(self.done)
+            self._retire()
+            if len(self.done) == n_done or not self.queue:
+                break
+        active_idx = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active_idx:
             return 0
-        # cohort = slots sharing the same pos (lockstep decode);
-        # pick the largest cohort this tick
-        by_pos: Dict[int, List[int]] = {}
-        for i in active:
-            by_pos.setdefault(self.slots[i].pos, []).append(i)
-        pos, cohort = max(by_pos.items(), key=lambda kv: len(kv[1]))
-        toks = np.zeros((self.B, 1), np.int32)
-        for i in cohort:
-            toks[i, 0] = self.slots[i].generated[-1]
-        prev_cache = self.cache
-        next_tok, new_cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), pos)
-        # the decode step wrote position `pos` (and advanced recurrent
-        # state) for EVERY row; restore the rows that are not in this
-        # cohort so their caches are untouched. (A production kernel would
-        # use masked per-row writes; one tick of double-buffering is the
-        # simple correct equivalent.)
-        others = [i for i in range(self.B) if i not in cohort]
-        if others:
-            idx = jnp.asarray(others)
-
-            def restore(new_leaf, old_leaf):
-                if new_leaf.ndim >= 1 and new_leaf.shape[0] == self.B:
-                    return new_leaf.at[idx].set(old_leaf[idx])
-                return old_leaf
-            new_cache = jax.tree_util.tree_map(restore, new_cache, prev_cache)
-        self.cache = new_cache
+        # per-row decode state, derived from the slots each tick (O(B))
+        last_tok = np.asarray([s.generated[-1] if s.generated else 0
+                               for s in self.slots], np.int32)
+        pos = np.asarray([s.pos for s in self.slots], np.int32)
+        active = np.asarray([s.req is not None for s in self.slots])
+        next_tok, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last_tok)[:, None],
+            jnp.asarray(pos), jnp.asarray(active))
         nt = np.asarray(next_tok)
-        for i in cohort:
+        for i in active_idx:
             self.slots[i].generated.append(int(nt[i]))
             self.slots[i].pos += 1
         self._retire()
-        return len(active)
+        return len(active_idx)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0

@@ -13,6 +13,8 @@ from repro.models import init_cache, model_apply, model_init
 from repro.optim import AdamWConfig
 from repro.train import TrainTask, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # arch-pool sweep: dozens of reduced-width model compiles
+
 KEY = jax.random.PRNGKey(0)
 ALL_ARCHS = list_archs()
 

@@ -14,6 +14,8 @@ from repro.kernels.ref import (
 
 KEY = jax.random.PRNGKey(0)
 
+pytestmark = pytest.mark.slow  # Pallas interpret-mode kernel sweeps
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("shape", [(2, 128, 128, 64), (3, 96, 160, 32),

@@ -95,6 +95,7 @@ class TestXLSTM:
         np.testing.assert_allclose(
             jnp.concatenate([h1, h2], axis=1), h_full, atol=1e-4)
 
+    @pytest.mark.slow
     def test_mlstm_block_decode_matches_full(self):
         cfg = XLSTMConfig(d_model=32, n_heads=4, chunk_size=8)
         p = mlstm_block_init(KEY, cfg)

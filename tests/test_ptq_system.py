@@ -66,7 +66,10 @@ def test_outliers_break_w8a8(setup):
     stays ~0; the outlier model picks up a multi-percent gap."""
     cfg, params, data = setup
     broken = jax.tree_util.tree_map(lambda x: x, params)
-    broken["embed"]["table"] = broken["embed"]["table"].at[:, 7].mul(100.0)
+    # 1000x on a fixed channel puts the per-tensor ranges far past the
+    # useful grid (x100 only produced a ~1.02 gap — too close to the 1.03
+    # assertion to demonstrate the failure mode robustly)
+    broken["embed"]["table"] = broken["embed"]["table"].at[:, 7].mul(1000.0)
     batches = [jax.tree_util.tree_map(jnp.asarray, data.batch(i))
                for i in range(4)]
     qc = QConfig()
@@ -80,6 +83,7 @@ def test_outliers_break_w8a8(setup):
     assert gap_bad > 1.03, gap_bad
 
 
+@pytest.mark.slow
 def test_bitwidth_sweep_monotone(setup):
     """Lower weight bits => higher (or equal) perplexity, W8A8 -> W4A8
     (paper Table 10 direction)."""

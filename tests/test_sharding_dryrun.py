@@ -80,8 +80,8 @@ MINI_DRYRUN = textwrap.dedent("""
     from repro.configs import SHAPES, get_arch, apply_method
     from repro.launch.dryrun import build_lowered
     from repro.launch.roofline import analyze
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((4, 4), ("data", "model"))
     spec = get_arch("{arch}")
     # reduced-width full-family config so the 16-dev compile is fast
     cfg = apply_method(spec.smoke(), "clipped_softmax")
@@ -95,6 +95,7 @@ MINI_DRYRUN = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # forced 16-device subprocess compile per cell
 @pytest.mark.parametrize("arch,shape", [
     ("granite-moe-1b-a400m", "train_4k"),
     ("deepseek-67b", "decode_32k"),

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import apply_method
 from repro.configs.paper_models import opt_tiny
@@ -15,6 +16,8 @@ from repro.quant import QConfig, calibrate, evaluate_perplexity
 from repro.serving import GenerateConfig, generate
 from repro.train import LoopConfig, TrainTask, run_training
 from repro.train.losses import clm_loss
+
+pytestmark = pytest.mark.slow  # end-to-end train->quantize->serve pipelines
 
 VOCAB, SEQ = 128, 32
 

@@ -22,6 +22,8 @@ from repro.train import (
 
 KEY = jax.random.PRNGKey(0)
 
+pytestmark = pytest.mark.slow  # training-loop + checkpoint round-trips
+
 
 def _tiny_task(**kw):
     cfg = opt_tiny(vocab=128, seq_len=32)
