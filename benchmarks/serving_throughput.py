@@ -1,13 +1,32 @@
-"""Serving throughput: decode tokens/sec vs batch size for the paper's
-three attention variants (vanilla, clipped softmax, gated attention) on the
-fused decode engine, plus a continuous-batching run with staggered request
-lengths — the Table 11-style serving companion: the paper's methods must
-not cost decode throughput.
+"""Serving throughput: decode tokens/sec + KV-pool capacity for the fused
+per-slot-position decode engine.
 
-Two measurements per (method, batch):
-  * ``generate``           — one jitted lax.while_loop for the whole decode;
-  * ``ContinuousBatcher``  — per-slot positions, every active slot decodes
-    every tick (throughput scales with active slots, not cohort size).
+This is the serving companion to paper Table 11 (runtime overhead): the
+paper's quantization-enabling methods (clipped softmax Sec. 4.1, gated
+attention Sec. 4.2) must not cost decode throughput, and the serving engine
+is where that bill would come due. No direct paper figure — the paper stops
+at PTQ accuracy; this script covers the deployment half of its claim.
+
+Three sections:
+
+  1. ``method x batch`` — tok/s for vanilla / clipped_softmax /
+     gated_attention under both entry points:
+       * ``generate``           — one jitted lax.while_loop per batch;
+       * ``ContinuousBatcher``  — per-slot positions, every active slot
+         decodes every tick (throughput scales with active slots, not
+         cohort size).
+  2. ``dense vs paged capacity`` — same total KV memory (N dense slots of
+     ``max_len`` == N*max_len/block_size pool blocks), mixed prompt
+     lengths: how many requests run concurrently under each allocator
+     (paged admits ~3x here: blocks scale with live tokens, slots with
+     worst case).
+  3. ``dense vs paged throughput`` — end-to-end tok/s over the same mixed
+     request stream. Paged finishes in ~half the ticks (more rows in
+     flight), but on this CPU-scale reference path each paged tick pays a
+     KV gather that materializes every row's virtual sequence, so tok/s
+     lands near parity; a fused Pallas paged-attention kernel that reads
+     blocks in place is the open item that turns the capacity win into a
+     proportional throughput win (see ROADMAP).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py
 Scale with REPRO_BENCH_STEPS (default 200 -> max_new_tokens 32).
@@ -84,6 +103,61 @@ def bench_batcher(cfg, params, b: int, n_req: int = None) -> float:
     return sum(len(r.output) for r in done) / dt
 
 
+def _mixed_requests(n_req: int, max_len: int, seed: int = 0):
+    """Mixed prompt lengths from a few fixed buckets (bounds XLA compiles)
+    plus a long-prompt straggler every 8th request — the workload where a
+    dense slot pool wastes most of its reservation (short requests) AND has
+    a whole-slot hog (the straggler)."""
+    rng = np.random.default_rng(seed)
+    buckets = (8, 16, 32)
+    straggler = max(2 * max_len // 3, max(buckets))
+    reqs = []
+    for i in range(n_req):
+        t = straggler if i % 8 == 4 else int(buckets[i % len(buckets)])
+        reqs.append((i, rng.integers(4, VOCAB, size=t).astype(np.int32),
+                     int(rng.integers(MAX_NEW // 2, MAX_NEW + 1))))
+    return reqs
+
+
+def bench_paged_vs_dense(cfg, params, n_dense_slots: int = 2,
+                         max_len: int = 96, block_size: int = 16):
+    """Equal-memory comparison: N dense slots of ``max_len`` vs a paged pool
+    of N*max_len/block_size blocks spread over 4N batch rows. Returns
+    (concurrency, tok/s) per allocator over the same request stream."""
+    n_req = 8 * n_dense_slots
+    num_blocks = n_dense_slots * max_len // block_size
+
+    def build(paged: bool) -> ContinuousBatcher:
+        if paged:
+            return ContinuousBatcher(params, cfg,
+                                     batch_size=4 * n_dense_slots,
+                                     max_len=max_len, paged=True,
+                                     block_size=block_size,
+                                     num_blocks=num_blocks)
+        return ContinuousBatcher(params, cfg, batch_size=n_dense_slots,
+                                 max_len=max_len)
+
+    out = {}
+    for paged in (False, True):
+        batcher = build(paged)          # blocks/slots fully reclaim per run,
+        concurrency, dt, done = 0, 0.0, []   # so one batcher serves both passes
+        for warm in (True, False):
+            for uid, prompt, mnt in _mixed_requests(n_req, max_len):
+                batcher.submit(Request(uid=uid, prompt=prompt.copy(),
+                                       max_new_tokens=mnt))
+            if warm:
+                batcher.run()           # compile every prefill/decode shape
+                batcher.done.clear()
+            else:
+                t0 = time.perf_counter()
+                concurrency = batcher.step()
+                done = batcher.run()
+                dt = time.perf_counter() - t0
+        tok_s = sum(len(r.output) for r in done) / dt
+        out["paged" if paged else "dense"] = (concurrency, tok_s)
+    return out
+
+
 def main() -> None:
     print(f"decode throughput, max_new_tokens={MAX_NEW}, prompt={PROMPT_LEN}")
     print("method,batch,generate_tok_s,batcher_tok_s")
@@ -93,6 +167,13 @@ def main() -> None:
             g = bench_generate(cfg, params, b)
             s = bench_batcher(cfg, params, b)
             print(f"{name},{b},{g:.1f},{s:.1f}")
+
+    print("\n# dense vs paged KV cache, equal pool memory "
+          "(N dense slots == N*max_len/block_size blocks), mixed prompts")
+    print("allocator,concurrent_requests,tok_s")
+    cfg, params = make(None, {})
+    for alloc, (conc, tok_s) in bench_paged_vs_dense(cfg, params).items():
+        print(f"{alloc},{conc},{tok_s:.1f}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ from repro.core.attention import (
     chunked_attention,
     dense_attention,
     make_attention_mask,
+    paged_attention,
 )
 from repro.core.outliers import (
     OutlierStats,
@@ -30,7 +31,7 @@ __all__ = [
     "softcap", "softmax", "stretch_and_clip",
     "GateConfig", "gate_logits", "gate_param_count", "gate_probs", "init_gate",
     "AttentionConfig", "attention", "chunked_attention", "dense_attention",
-    "make_attention_mask",
+    "make_attention_mask", "paged_attention",
     "OutlierStats", "collect_activation_stats", "infinity_norm", "kurtosis",
     "outlier_counts_by_dim", "outlier_counts_by_token", "outlier_mask",
 ]

@@ -1,7 +1,7 @@
 """Multi-head attention with the paper's modifications, GQA, local windows,
 logit soft-capping and qk-norm — the core op the whole model zoo shares.
 
-Two execution paths:
+Three execution paths:
 
   * ``dense_attention``   — materializes the (Tq, Tk) probability matrix.
     Reference semantics; used for short sequences, decode steps and as the
@@ -13,9 +13,25 @@ Two execution paths:
     stretch_and_clip per block and accumulates P·V. Vanilla softmax takes
     the 1-pass online path. This is the XLA (non-Pallas) implementation the
     dry-run lowers; `repro.kernels.flash_attention` is the TPU Pallas twin.
+  * ``paged_attention``   — serving decode over a paged KV cache: K/V live
+    in a global block pool ``(num_blocks, block_size, Hkv, Dh)`` and each
+    batch row owns a *block table* of physical block ids. The row's virtual
+    KV sequence is gathered block-by-block from the pool, then masked per
+    block: unallocated table entries (id < 0) contribute nothing, and the
+    usual causal/window mask over *logical* positions hides any garbage in
+    the partially-filled tail block. See ``docs/serving.md``.
 
 Layout convention: q (B, Tq, Hq, Dh); k/v (B, Tk, Hkv, Dh) with
 Hq = G * Hkv (grouped-query attention).
+
+The ``q_offset`` vector contract (introduced with the per-slot-position
+decode engine, PR 1): everywhere a query block is positioned inside the full
+sequence — ``make_attention_mask``, the chunked masks, ``dense_attention``
+and ``paged_attention`` — the offset may be either a shared python/scalar
+position or a per-row ``(B,)`` int32 vector. With a vector, masks acquire a
+leading batch dimension ``(B, Tq, Tk)`` and every row attends at its own
+absolute position; this is what lets the continuous batcher decode a batch
+whose rows sit at unrelated sequence positions in ONE fused step.
 """
 from __future__ import annotations
 
@@ -257,6 +273,45 @@ def chunked_attention(
     if gate_pi is not None:
         out = out * gate_pi[..., None].astype(out.dtype)
     return out
+
+
+def paged_attention(
+    q: Array,
+    k_pool: Array,
+    v_pool: Array,
+    block_table: Array,
+    cfg: AttentionConfig,
+    q_offset=0,
+    gate_pi: Optional[Array] = None,
+) -> Array:
+    """Gather-based attention over a paged KV cache. Returns (B, Tq, Hq, Dh).
+
+    ``k_pool``/``v_pool``: (num_blocks, block_size, Hkv, Dh) global pools
+    shared by every batch row. ``block_table``: (B, W) int32 physical block
+    ids; entry j maps the row's logical token range
+    [j*block_size, (j+1)*block_size) onto pool block ``block_table[b, j]``,
+    with -1 marking an unallocated entry. Each row's blocks are gathered and
+    flattened into a (B, W*block_size, Hkv, Dh) virtual KV sequence indexed
+    by *logical* position, so the standard causal/window mask built from
+    ``q_offset`` (scalar or per-row (B,) vector) applies unchanged; a
+    per-block validity mask additionally hides unallocated entries. Masked
+    positions contribute exact zeros to the softmax, so the result is
+    bitwise identical to dense attention over a contiguous cache of the
+    same length W*block_size holding the same tokens (``init_paged_cache``
+    enforces that this equals the logical ``max_len`` — the clipped
+    softmax's ``alpha`` resolves gamma from the KV axis length, so a padded
+    axis would shift the clip threshold).
+    """
+    b, w = block_table.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    tq, tk = q.shape[1], w * bs
+    safe = jnp.clip(block_table, 0, nb - 1)
+    k = k_pool[safe].reshape(b, tk, *k_pool.shape[2:])
+    v = v_pool[safe].reshape(b, tk, *v_pool.shape[2:])
+    valid = jnp.repeat(block_table >= 0, bs, axis=1)             # (B, Tk)
+    mask = make_attention_mask(tq, tk, cfg.causal, cfg.window, q_offset)
+    mask = jnp.broadcast_to(mask, (b, tq, tk)) & valid[:, None, :]
+    return dense_attention(q, k, v, cfg, mask=mask, gate_pi=gate_pi)
 
 
 def attention(

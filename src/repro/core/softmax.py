@@ -9,8 +9,9 @@ no-op don't have to grow activation outliers.
 with gamma <= 0 <= 1 <= zeta (Eq. 4). Only gamma < 0 (clipping at zero)
 matters empirically (paper Table 1 / Table 8); zeta defaults to 1.
 
-`gamma_from_alpha` implements the sequence-length-robust parameterization
-gamma = -alpha / T from paper Section 5.2 (alpha in [2, 4] works across T).
+`ClippedSoftmaxConfig.resolve_gamma` implements the sequence-length-robust
+parameterization gamma = -alpha / T from paper Section 5.2 (alpha in [2, 4]
+works across T).
 """
 from __future__ import annotations
 

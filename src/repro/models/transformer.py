@@ -25,7 +25,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import AttentionConfig, attention, dense_attention
+from repro.core.attention import (
+    AttentionConfig,
+    attention,
+    dense_attention,
+    paged_attention,
+)
 from repro.core.gating import GateConfig, gate_probs, init_gate
 from repro.core.softmax import ClippedSoftmaxConfig, softcap
 from repro.nn.layers import (
@@ -261,6 +266,7 @@ def _attn_block_apply(
         k = apply_rope(k, cos, sin)
 
     explicit_mask = None
+    paged_table = None
     if cache is not None:
         # align fresh q/k/v sharding with the d_head-sharded KV cache —
         # otherwise GSPMD falls back to "involuntary full rematerialization"
@@ -271,8 +277,29 @@ def _attn_block_apply(
         v = maybe_constrain(v, "dp", None, None, "tp")
         cache_len = cache["k"].shape[1]
         is_ring = "pos_ids" in cache
+        is_paged = "block_table" in cache
         per_row = jnp.ndim(pos) >= 1      # per-slot positions (decode engine)
-        if per_row:
+        if is_paged:
+            # Paged pool (num_blocks, block_size, Hkv, Dh): every write is
+            # routed through block_table[row, pos // block_size] indirection.
+            # Unallocated targets (table entry -1) and inactive rows are
+            # redirected out of bounds and dropped, the same masked-scatter
+            # convention as the dense per-row path below.
+            nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+            table = cache["block_table"]                         # (B, W)
+            tpos = jnp.broadcast_to(_positions(pos, t), (b, t))  # logical
+            phys = jnp.take_along_axis(table, tpos // bs, axis=1,
+                                       mode="fill", fill_value=-1)
+            if active is not None:
+                phys = jnp.where(active[:, None], phys, -1)
+            phys = jnp.where(phys < 0, nb, phys)    # out of bounds -> dropped
+            k_cache = cache["k"].at[phys, tpos % bs].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[phys, tpos % bs].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k_cache, "v": v_cache, "block_table": table}
+            paged_table = table
+        elif per_row:
             # Masked per-row scatter: each row b writes its block at its own
             # position pos[b]; inactive rows are redirected out of bounds and
             # dropped — no write, no double-buffer restore needed.
@@ -333,7 +360,10 @@ def _attn_block_apply(
             x_heads = q
         gate_pi = gate_probs(p["gate"], cfg.gate_cfg, x_heads, h)
 
-    if explicit_mask is not None:
+    if paged_table is not None:
+        attn_out = paged_attention(q, k_all, v_all, paged_table, acfg,
+                                   q_offset=q_offset, gate_pi=gate_pi)
+    elif explicit_mask is not None:
         attn_out = dense_attention(q, k_all, v_all, acfg, mask=explicit_mask,
                                    q_offset=q_offset, gate_pi=gate_pi)
     else:
@@ -438,29 +468,30 @@ def model_init(key: Array, cfg: ModelConfig) -> Params:
     return p
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=None) -> Params:
-    """Per-layer decode state: KV tensors for attention blocks, recurrent
-    states otherwise. Mirrors the param grouping so scan can zip them."""
-    dtype = dtype or cfg.compute_dtype
+def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 dtype) -> Params:
+    """Dense decode state of one block: KV tensors for attention blocks
+    (ring buffer for local_attn), recurrent states otherwise."""
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "local_attn"):
+        # local attention only ever needs `window` history (ring buffer)
+        length = min(max_len, cfg.window) if (kind == "local_attn" and cfg.window) else max_len
+        c = {
+            "k": jnp.zeros((batch, length, hkv, dh), dtype),
+            "v": jnp.zeros((batch, length, hkv, dh), dtype),
+        }
+        if kind == "local_attn" and cfg.window and length < cfg.max_seq_len:
+            # per-row ring positions: slots decode at different offsets
+            c["pos_ids"] = jnp.full((batch, length), -1, jnp.int32)
+        return c
+    if kind == "griffin":
+        return griffin_init_state(batch, cfg.rglru, dtype)
+    return xlstm_init_state(batch, kind, cfg.xlstm, dtype)
 
-    def one(kind: str):
-        if kind in ("attn", "local_attn"):
-            # local attention only ever needs `window` history (ring buffer)
-            length = min(max_len, cfg.window) if (kind == "local_attn" and cfg.window) else max_len
-            c = {
-                "k": jnp.zeros((batch, length, hkv, dh), dtype),
-                "v": jnp.zeros((batch, length, hkv, dh), dtype),
-            }
-            if kind == "local_attn" and cfg.window and length < cfg.max_seq_len:
-                # per-row ring positions: slots decode at different offsets
-                c["pos_ids"] = jnp.full((batch, length), -1, jnp.int32)
-            return c
-        if kind == "griffin":
-            return griffin_init_state(batch, cfg.rglru, dtype)
-        return xlstm_init_state(batch, kind, cfg.xlstm, dtype)
 
+def _assemble_cache(cfg: ModelConfig, one) -> Params:
+    """Mirror the param grouping (scan stacking + unrolled tail) so the layer
+    scan can zip params with cache."""
     groups = [
         {f"b{i}": one(kind) for i, kind in enumerate(cfg.pattern)}
         for _ in range(cfg.n_groups)
@@ -473,6 +504,58 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     if cfg.tail_pattern:
         cache["tail"] = {f"t{i}": one(kind) for i, kind in enumerate(cfg.tail_pattern)}
     return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    """Dense per-layer decode state: every batch row reserves ``max_len`` KV
+    positions up front. Simple and fully static, but pool memory scales with
+    the worst-case length; ``init_paged_cache`` is the live-token-scaled
+    alternative."""
+    dtype = dtype or cfg.compute_dtype
+    return _assemble_cache(cfg, partial(_cache_entry, cfg, batch=batch,
+                                        max_len=max_len, dtype=dtype))
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_blocks: int, block_size: int = 16,
+                     dtype=None) -> Params:
+    """Paged decode state (vLLM-style): each global-attention layer holds a
+    shared block pool ``k``/``v`` of shape (num_blocks, block_size, Hkv, Dh)
+    plus a per-row ``block_table`` (batch, ceil(max_len / block_size)) of
+    physical block ids (-1 = unallocated). Cache memory scales with *live
+    tokens* (num_blocks * block_size across the whole batch) instead of
+    batch * max_len, and ``max_len`` becomes a per-row logical cap only.
+
+    Block tables are owned by the scheduler (host side): allocation and
+    freeing happen outside jit, the tables are passed in as cache leaves, and
+    the model only reads them — cache writes go through
+    ``block_table[pos // block_size]`` indirection (see _attn_block_apply).
+    Ring (local_attn) and recurrent states keep their dense per-row layout;
+    they are already O(window) / O(1) per row.
+    """
+    dtype = dtype or cfg.compute_dtype
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if max_len % block_size:
+        raise ValueError(
+            f"max_len={max_len} must be a multiple of block_size="
+            f"{block_size}: the virtual KV length (table width * "
+            f"block_size) must equal the logical cap so paged and dense "
+            f"attention see the same KV axis length — softmax_cfg.alpha "
+            f"resolves gamma = -alpha/T from it, so a padded axis would "
+            f"silently change the clip threshold")
+    n_entries = max_len // block_size
+
+    def one(kind: str):
+        if kind == "attn":
+            return {
+                "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+                "v": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+                "block_table": jnp.full((batch, n_entries), -1, jnp.int32),
+            }
+        return _cache_entry(cfg, kind, batch, max_len, dtype)
+
+    return _assemble_cache(cfg, one)
 
 
 def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
@@ -516,6 +599,11 @@ def model_apply(
     optional (B,) bool mask: rows with ``active=False`` still compute (their
     logits are garbage) but their cache/state writes are dropped — the
     masked-write contract the continuous batcher relies on.
+    The cache may be dense (``init_cache``: per-row contiguous KV) or paged
+    (``init_paged_cache``: global block pools + per-row block tables, writes
+    routed through ``block_table[pos // block_size]``); the layout is
+    detected per layer from the cache leaves, and both produce bitwise
+    identical logits for the same tokens.
     Returns (logits (B,T,vocab) f32, aux) where aux may contain
     "attn_outputs" (stacked per-layer residual values) and "cache".
     """

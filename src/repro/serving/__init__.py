@@ -8,6 +8,10 @@ from repro.serving.decode import (
 
 __all__ = ["GenerateConfig", "decode_one", "generate", "prefill",
            "sample_logits"]
-from repro.serving.scheduler import ContinuousBatcher, Request  # noqa: E402
+from repro.serving.scheduler import (  # noqa: E402
+    BlockAllocator,
+    ContinuousBatcher,
+    Request,
+)
 
-__all__ += ["ContinuousBatcher", "Request"]
+__all__ += ["BlockAllocator", "ContinuousBatcher", "Request"]

@@ -7,6 +7,26 @@
 per-token python dispatch; (prefill, decode) are the same functions the
 decode_* dry-run cells lower, and ``decode_one`` accepts per-row positions
 plus an active mask so the continuous batcher shares the exact same step.
+
+The two per-row contracts the batcher builds on (both live in
+``model_apply`` / ``core.attention``, documented here because this module is
+their serving entry point):
+
+  * ``pos`` / ``q_offset`` vectors — every position argument may be a shared
+    scalar OR a per-row (B,) int32 vector. With a vector, row b's query
+    block sits at absolute position ``pos[b]`` (RoPE angles, learned
+    positional embeds and attention masks all index per row), which is what
+    lets one fused step decode a batch whose rows are at unrelated
+    positions.
+  * masked scatter cache writes — with vector ``pos``, KV-cache updates are
+    per-row scatters at ``pos[b]``; rows with ``active[b] == False`` have
+    their write index redirected out of bounds and dropped (jax scatter
+    ``mode="drop"``), so a dead or stalled row's cache is left bit-exact
+    untouched without any save/restore double buffering.
+
+``generate`` itself always uses the dense contiguous cache (a standalone
+batch has no reuse to exploit); the paged block-pool cache is a scheduler
+concern — see ``repro.serving.scheduler`` and ``docs/serving.md``.
 """
 from __future__ import annotations
 

@@ -4,16 +4,39 @@ Real serving stacks (vLLM/JetStream-style) keep the decode batch full by
 slotting new requests into finished sequences' cache rows instead of
 waiting for the whole batch to drain. This is the jax-native equivalent:
 
-  * a fixed-shape slot pool (batch B, max_len L) holds the KV cache;
+  * a fixed-shape slot pool (batch B rows) holds the decode state;
   * every tick decodes EVERY active slot in one fused jitted step, each row
     at its own position (per-row scatter cache writes — no lockstep
     cohorts, no double-buffer restore of idle rows: inactive rows' writes
     are masked out inside the kernel);
   * finished slots (EOS or length budget) are refilled from the queue by
-    running a per-slot prefill into the shared cache row.
+    running a per-slot prefill into the shared cache.
 
-Slot bookkeeping is host-side python (cheap, O(B) per step); all tensor
-work stays jitted with static shapes — the pattern that scales to the
+Two KV-cache backends, selected by ``paged``:
+
+  * dense (default) — every row reserves ``max_len`` KV positions up front
+    (``init_cache``). Admission is gated by free *slots*; memory scales with
+    B * max_len regardless of how long requests actually are.
+  * paged — a global block pool of ``num_blocks`` blocks of ``block_size``
+    tokens per layer plus per-row block tables (``init_paged_cache``).
+    Admission is gated by free *blocks*, memory scales with live tokens, and
+    ``max_len`` is only a per-row logical cap (it may exceed the dense
+    per-slot budget the same total memory would buy). ``BlockAllocator`` is
+    the host-side free list; blocks are allocated at admission (prompt + the
+    first decode write), grown one block at a time as rows decode across a
+    block boundary, and freed at retirement. When the pool is exhausted and
+    NO row can advance, the most recently admitted stalled row is preempted
+    vLLM-style: its blocks are freed and the request is re-queued at the
+    front for recompute-resume (re-prefill of prompt + tokens generated so
+    far — greedy decode makes the resumed continuation exact).
+
+The per-row ``pos`` vector / masked-scatter contract the decode step relies
+on is documented in ``repro.models.transformer.model_apply`` and
+``repro.core.attention``; the architecture narrative lives in
+``docs/serving.md``.
+
+Slot and block bookkeeping is host-side python (cheap, O(B) per step); all
+tensor work stays jitted with static shapes — the pattern that scales to the
 pod-sharded cache (slots = batch rows, already sharded over dp).
 """
 from __future__ import annotations
@@ -25,9 +48,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import ModelConfig, init_cache, model_apply
+from repro.models.transformer import (
+    ModelConfig,
+    init_cache,
+    init_paged_cache,
+    model_apply,
+)
 
 Array = jax.Array
+
+_TABLE_KEY = jax.tree_util.DictKey("block_table")
 
 
 @dataclasses.dataclass
@@ -37,6 +67,8 @@ class Request:
     max_new_tokens: int = 32
     # filled by the scheduler
     output: Optional[np.ndarray] = None
+    # internal: tokens generated before a preemption (recompute-resume state)
+    resume_generated: Optional[List[int]] = None
 
 
 @dataclasses.dataclass
@@ -44,26 +76,111 @@ class _Slot:
     req: Optional[Request] = None
     pos: int = 0                     # next cache position
     generated: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)  # paged only
+    order: int = 0                   # admission sequence number
+
+
+class BlockAllocator:
+    """Host-side free list over the global KV block pool.
+
+    Physical block ids are plain ints in [0, num_blocks); the pool tensors
+    live on device, only the *mapping* is host state. ``alloc`` is
+    all-or-nothing so a request never holds a partial reservation."""
+
+    def __init__(self, num_blocks: int) -> None:
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (and no side effect) if not enough."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: List[int]) -> None:
+        self._free.extend(blocks)
+
+
+def _table_leaf(leaf, table: Array):
+    """Fit a host-owned (B, W) block table onto a cache table leaf,
+    broadcasting over the leading layer-group axis of scanned caches."""
+    if leaf.ndim == table.ndim + 1:                  # scanned: (G, B, W)
+        return jnp.broadcast_to(table, (leaf.shape[0],) + table.shape)
+    return table
+
+
+def _with_tables(cache, table: Array):
+    """Return ``cache`` with every block_table leaf set to ``table`` (B, W)."""
+    def set_leaf(path, leaf):
+        if path and path[-1] == _TABLE_KEY:
+            return _table_leaf(leaf, table)
+        return leaf
+    return jax.tree_util.tree_map_with_path(set_leaf, cache)
 
 
 class ContinuousBatcher:
-    """Slot-pool scheduler over a shared static KV cache.
+    """Slot-pool scheduler over a shared static KV cache (dense or paged).
 
-    Device state per slot row: KV cache, next position and last sampled
-    token; one jitted decode advances all active rows per tick regardless
-    of their (generally different) positions."""
+    Device state per slot row: KV cache (dense row or block-table view into
+    the pool), next position and last sampled token; one jitted decode
+    advances all active rows per tick regardless of their (generally
+    different) positions."""
 
     def __init__(self, params, cfg: ModelConfig, batch_size: int,
-                 max_len: int, eos_id: Optional[int] = None) -> None:
+                 max_len: int, eos_id: Optional[int] = None,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None) -> None:
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.L = max_len
         self.eos_id = eos_id
-        self.cache = init_cache(cfg, batch_size, max_len)
+        self.paged = paged
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        self._order = 0
+        if paged:
+            self.block_size = block_size
+            n_entries = -(-max_len // block_size)
+            # default pool = dense-equivalent memory (B rows of max_len)
+            self.num_blocks = num_blocks if num_blocks is not None \
+                else batch_size * n_entries
+            self.allocator = BlockAllocator(self.num_blocks)
+            self.tables = np.full((batch_size, n_entries), -1, np.int32)
+            # host tables are mirrored into the device cache lazily: only
+            # ticks after an admit/alloc/retire/preempt pay the re-upload
+            self._tables_dirty = True
+            make_cache = lambda b: init_paged_cache(  # noqa: E731
+                cfg, b, max_len, self.num_blocks, block_size)
+        else:
+            make_cache = lambda b: init_cache(cfg, b, max_len)  # noqa: E731
+        self.cache = make_cache(batch_size)
+        # admission prefills run against a batch-1 view; the fresh zero
+        # template is immutable, so one copy serves every admission. In
+        # paged mode only its batch-led leaves (ring/recurrent rows, table)
+        # are ever read — build it with a 1-block pool so the template does
+        # not duplicate the real pool's device memory
+        self._row_template = init_paged_cache(cfg, 1, max_len, 1, block_size) \
+            if paged else make_cache(1)
+        # one-shot ring prefill cannot exceed the local_attn window (see
+        # ROADMAP: chunked ring prefill); recompute-preemption must not
+        # create resume prompts that would wrap the ring
+        has_ring = any(k == "local_attn"
+                       for k in cfg.pattern + cfg.tail_pattern)
+        self._ring_limit = min(max_len, cfg.window) \
+            if (paged and has_ring and cfg.window) else None
+        # which leaves are batch-free (the paged global pools, shared by all
+        # rows) vs batch-led (dense/ring KV, recurrent states, block
+        # tables): exactly the leaves whose shape ignores the batch argument
+        spec1, spec2 = (jax.eval_shape(lambda b=b: make_cache(b))
+                        for b in (1, 2))
+        self._batch_free = jax.tree_util.tree_map(
+            lambda a, b: a.shape == b.shape, spec1, spec2)
 
         def _decode(params, cache, tokens, pos, active):
             # one fused step: every row decodes at its own position; writes
@@ -78,42 +195,170 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue a request, rejecting impossible ones up front — a lazy
+        admit-time failure would wedge the FIFO queue head and strand every
+        in-flight and queued request behind it. (Preemption re-queues
+        bypass this: resume lengths are bounded by construction.)"""
+        t = len(req.prompt)
+        if t > self.L - 1:
+            raise ValueError(
+                f"request uid={req.uid}: {t} prompt tokens do not fit a "
+                f"max_len={self.L} {'row' if self.paged else 'slot'} "
+                f"(>= 1 position must remain for decode)")
+        if self.paged and self._blocks_for(t + 1) > self.num_blocks:
+            raise ValueError(
+                f"request uid={req.uid} needs {self._blocks_for(t + 1)} "
+                f"blocks; the pool only has {self.num_blocks}")
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.req is None]
 
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def _row_cache(self, i: int):
+        """Batch-1 admission cache for slot ``i``. Dense mode: the fresh
+        zero template (batch-1 caches are independent of the pool). Paged
+        mode: paged entries reference the LIVE global pools plus this row's
+        host block table, while batch-led entries (local_attn rings,
+        recurrent states) still start from the fresh template — a slice of
+        the shared cache would leak the previous occupant's ring pos_ids /
+        recurrent state into the new request's prefill."""
+        if not self.paged:
+            return self._row_template
+        table = jnp.asarray(self.tables[i:i + 1])
+
+        def pick(path, batch_free, fresh_leaf, live_leaf):
+            if path and path[-1] == _TABLE_KEY:
+                return _table_leaf(fresh_leaf, table)
+            return live_leaf if batch_free else fresh_leaf
+
+        return jax.tree_util.tree_map_with_path(
+            pick, self._batch_free, self._row_template, self.cache)
+
+    def _merge_row(self, new_cache, i: int) -> None:
+        """Fold a batch-1 admission prefill back into the shared cache:
+        batch-led leaves are inserted at row ``i``; paged pool leaves are
+        adopted whole (the prefill scattered into this row's blocks in
+        place — dense mode has no such leaves to adopt); block tables stay
+        host-owned."""
+        def pick(path, batch_free, live_leaf, new_leaf):
+            if path and path[-1] == _TABLE_KEY:
+                return live_leaf
+            if batch_free:
+                return new_leaf if self.paged else live_leaf
+            # scanned caches stack layer groups in front: (G, B, ...)
+            ax = 1 if path and path[0] == jax.tree_util.DictKey("groups") \
+                else 0
+            dst = (slice(None),) * ax + (i,)
+            src = (slice(None),) * ax + (0,)
+            return live_leaf.at[dst].set(new_leaf[src])
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            pick, self._batch_free, self.cache, new_cache)
+
     def _admit(self) -> None:
-        """Prefill queued requests into free slots. Each prefill runs on
-        its own batch-1 cache and the resulting row is inserted into the
-        slot pool — never touching in-flight rows."""
+        """Prefill queued requests into free slots, FIFO. Dense mode gates on
+        free slots only; paged mode additionally requires blocks for the
+        prompt plus the first decode write (head-of-line: if the front
+        request doesn't fit, admission waits rather than skipping it).
+        A preempted request re-prefills prompt + generated-so-far and
+        resumes its token list."""
         for i in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
-            t = len(req.prompt)
-            single = init_cache(self.cfg, 1, self.L)
+            req = self.queue[0]
+            resume = req.resume_generated
+            toks = req.prompt if not resume else \
+                np.concatenate([req.prompt,
+                                np.asarray(resume[:-1], np.int32)])
+            t = len(toks)
+            if self.paged:
+                blocks = self.allocator.alloc(self._blocks_for(t + 1))
+                if blocks is None:
+                    break                       # wait for blocks to free up
+                self.queue.pop(0)
+                self.tables[i, :len(blocks)] = blocks
+                self._tables_dirty = True
+            else:
+                blocks = []
+                self.queue.pop(0)
             logits, aux = model_apply(
                 self.params, self.cfg,
-                {"tokens": jnp.asarray(req.prompt)[None, :]},
-                cache=single, pos=0)
+                {"tokens": jnp.asarray(toks)[None, :]},
+                cache=self._row_cache(i), pos=0)
+            # paged: the prefill scattered into this row's pool blocks in
+            # place; batch-led state (dense/ring KV, recurrent) comes back
+            # batch-1 and is inserted at row i
+            self._merge_row(aux["cache"], i)
+            if resume:
+                gen = list(resume)
+                req.resume_generated = None
+            else:
+                gen = [int(jnp.argmax(logits[0, -1]))]
+            self.slots[i] = _Slot(req=req, pos=t, generated=gen,
+                                  blocks=blocks, order=self._order)
+            self._order += 1
 
-            def insert(path, pool_leaf, row_leaf):
-                # scanned caches stack layer groups in front: (G, B, L, ...)
-                ax = 1 if path and path[0] == jax.tree_util.DictKey("groups") \
-                    else 0
-                if row_leaf is not None and pool_leaf.ndim > ax and \
-                        row_leaf.shape[ax] == 1 and \
-                        pool_leaf.shape[ax] == self.B:
-                    dst = (slice(None),) * ax + (i,)
-                    src = (slice(None),) * ax + (0,)
-                    return pool_leaf.at[dst].set(row_leaf[src])
-                return pool_leaf  # batch-free leaves
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` for recompute: free its blocks, stash its
+        generated tokens on the request, and put it at the queue front."""
+        s = self.slots[i]
+        s.req.resume_generated = list(s.generated)
+        self.allocator.free(s.blocks)
+        self.tables[i] = -1
+        self._tables_dirty = True
+        self.queue.insert(0, s.req)
+        self.slots[i] = _Slot()
 
-            self.cache = jax.tree_util.tree_map_with_path(
-                insert, self.cache, aux["cache"])
-            first = int(jnp.argmax(logits[0, -1]))
-            self.slots[i] = _Slot(req=req, pos=t, generated=[first])
+    def _ensure_blocks(self) -> List[int]:
+        """Paged decode-tick allocation: give every active row the block its
+        next write position lands in. Rows that cannot get one simply skip
+        this tick (their state is untouched, so retrying later is free). If
+        the pool is exhausted and *no* row can advance, preempt the most
+        recently admitted stalled row and retry; a single stalled row holding
+        the whole pool means the pool is simply too small for the request.
+        Returns the slot indices that can decode this tick."""
+        while True:
+            ready, stalled = [], []
+            for i, s in enumerate(self.slots):
+                if s.req is None:
+                    continue
+                need = s.pos // self.block_size + 1 - len(s.blocks)
+                if need > 0:
+                    got = self.allocator.alloc(need)
+                    if got is None:
+                        stalled.append(i)
+                        continue
+                    self.tables[i, len(s.blocks):len(s.blocks) + need] = got
+                    s.blocks.extend(got)
+                    self._tables_dirty = True
+                ready.append(i)
+            if ready or not stalled:
+                return ready
+            if len(stalled) == 1:
+                s = self.slots[stalled[0]]
+                raise RuntimeError(
+                    f"block pool too small: request uid={s.req.uid} holds "
+                    f"{len(s.blocks)}/{self.num_blocks} blocks and still "
+                    f"needs more; increase num_blocks")
+            # a preempted row resumes via a one-shot re-prefill of
+            # prompt + generated-so-far (= pos tokens); past the local_attn
+            # window that prefill would wrap the ring and silently corrupt
+            # the continuation, so such rows are not preemptable
+            preemptable = [i for i in stalled
+                           if self._ring_limit is None
+                           or self.slots[i].pos <= self._ring_limit]
+            if not preemptable:
+                raise RuntimeError(
+                    f"block pool exhausted and every stalled row is past "
+                    f"the local_attn window ({self._ring_limit} tokens), so "
+                    f"none can be preempted for recompute (one-shot ring "
+                    f"prefill limit — see ROADMAP: chunked ring prefill); "
+                    f"increase num_blocks")
+            self._preempt(max(preemptable,
+                              key=lambda i: self.slots[i].order))
 
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
@@ -125,11 +370,15 @@ class ContinuousBatcher:
             if out_len >= s.req.max_new_tokens or hit_eos or s.pos >= self.L - 1:
                 s.req.output = np.asarray(s.generated, np.int32)
                 self.done.append(s.req)
+                if self.paged:
+                    self.allocator.free(s.blocks)
+                    self.tables[i] = -1
+                    self._tables_dirty = True
                 self.slots[i] = _Slot()
 
     def step(self) -> int:
         """One scheduler tick: admit, decode one token for EVERY active
-        slot, retire. Returns number of active slots."""
+        slot that has cache room, retire. Returns number of decoded slots."""
         # a prefill's first token may already satisfy EOS or the budget;
         # retire-and-refill until the slot set is stable before decoding
         while True:
@@ -138,23 +387,33 @@ class ContinuousBatcher:
             self._retire()
             if len(self.done) == n_done or not self.queue:
                 break
-        active_idx = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active_idx:
+        if self.paged:
+            run_idx = self._ensure_blocks()
+        else:
+            run_idx = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not run_idx:
             return 0
         # per-row decode state, derived from the slots each tick (O(B))
         last_tok = np.asarray([s.generated[-1] if s.generated else 0
                                for s in self.slots], np.int32)
         pos = np.asarray([s.pos for s in self.slots], np.int32)
-        active = np.asarray([s.req is not None for s in self.slots])
+        active = np.zeros((self.B,), bool)
+        active[run_idx] = True
+        if self.paged and self._tables_dirty:
+            self.cache = _with_tables(self.cache, jnp.asarray(self.tables))
+            self._tables_dirty = False
+        # the decode step returns its block tables unchanged, so in steady
+        # state (no admissions/retirements) the paged tick is as cheap as
+        # the dense one: no table upload, no tree surgery
         next_tok, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(last_tok)[:, None],
             jnp.asarray(pos), jnp.asarray(active))
         nt = np.asarray(next_tok)
-        for i in active_idx:
+        for i in run_idx:
             self.slots[i].generated.append(int(nt[i]))
             self.slots[i].pos += 1
         self._retire()
-        return len(active_idx)
+        return len(run_idx)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0
