@@ -22,11 +22,12 @@ Three sections:
      worst case).
   3. ``dense vs paged throughput`` — end-to-end tok/s over the same mixed
      request stream. Paged finishes in ~half the ticks (more rows in
-     flight), but on this CPU-scale reference path each paged tick pays a
-     KV gather that materializes every row's virtual sequence, so tok/s
-     lands near parity; a fused Pallas paged-attention kernel that reads
-     blocks in place is the open item that turns the capacity win into a
-     proportional throughput win (see ROADMAP).
+     flight); each tick's attention read visits only the allocated
+     block-table prefix (the scheduler's static ``live_width`` — Pallas
+     kernel on TPU, sliced XLA gather on CPU), so the read cost tracks
+     live tokens, but at this CPU toy scale the model matmuls dominate
+     and tok/s lands near parity. The read-path scaling itself is
+     isolated in ``kernel_bench.py`` (BENCH_paged_kernel.json).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py
 Scale with REPRO_BENCH_STEPS (default 200 -> max_new_tokens 32).

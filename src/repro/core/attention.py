@@ -15,11 +15,15 @@ Three execution paths:
     dry-run lowers; `repro.kernels.flash_attention` is the TPU Pallas twin.
   * ``paged_attention``   — serving decode over a paged KV cache: K/V live
     in a global block pool ``(num_blocks, block_size, Hkv, Dh)`` and each
-    batch row owns a *block table* of physical block ids. The row's virtual
-    KV sequence is gathered block-by-block from the pool, then masked per
-    block: unallocated table entries (id < 0) contribute nothing, and the
-    usual causal/window mask over *logical* positions hides any garbage in
-    the partially-filled tail block. See ``docs/serving.md``.
+    batch row owns a *block table* of physical block ids. A dispatcher over
+    two backends: the fused Pallas TPU kernel
+    (``repro.kernels.paged_attention``) that reads pool blocks in place
+    through a scalar-prefetched block table (default on TPU), and
+    ``paged_attention_gather`` — the XLA oracle that gathers the row's
+    virtual KV sequence block-by-block, then masks per block: unallocated
+    table entries (id < 0) contribute nothing, and the usual causal/window
+    mask over *logical* positions hides any garbage in the partially-filled
+    tail block. See ``docs/serving.md``.
 
 Layout convention: q (B, Tq, Hq, Dh); k/v (B, Tk, Hkv, Dh) with
 Hq = G * Hkv (grouped-query attention).
@@ -275,7 +279,7 @@ def chunked_attention(
     return out
 
 
-def paged_attention(
+def paged_attention_gather(
     q: Array,
     k_pool: Array,
     v_pool: Array,
@@ -286,21 +290,17 @@ def paged_attention(
 ) -> Array:
     """Gather-based attention over a paged KV cache. Returns (B, Tq, Hq, Dh).
 
-    ``k_pool``/``v_pool``: (num_blocks, block_size, Hkv, Dh) global pools
-    shared by every batch row. ``block_table``: (B, W) int32 physical block
-    ids; entry j maps the row's logical token range
-    [j*block_size, (j+1)*block_size) onto pool block ``block_table[b, j]``,
-    with -1 marking an unallocated entry. Each row's blocks are gathered and
+    The XLA reference/oracle path: each row's blocks are gathered and
     flattened into a (B, W*block_size, Hkv, Dh) virtual KV sequence indexed
     by *logical* position, so the standard causal/window mask built from
     ``q_offset`` (scalar or per-row (B,) vector) applies unchanged; a
-    per-block validity mask additionally hides unallocated entries. Masked
-    positions contribute exact zeros to the softmax, so the result is
-    bitwise identical to dense attention over a contiguous cache of the
-    same length W*block_size holding the same tokens (``init_paged_cache``
-    enforces that this equals the logical ``max_len`` — the clipped
-    softmax's ``alpha`` resolves gamma from the KV axis length, so a padded
-    axis would shift the clip threshold).
+    per-block validity mask additionally hides unallocated entries (id < 0).
+    Masked positions contribute exact zeros to the softmax, so the result is
+    bitwise identical to dense attention over a contiguous cache of the same
+    length W*block_size holding the same tokens. If ``cfg.softmax`` uses
+    ``alpha``, gamma resolves from the gathered axis length W*block_size —
+    callers slicing the table to a live prefix must pre-resolve gamma from
+    the LOGICAL length (``paged_attention`` does).
     """
     b, w = block_table.shape
     nb, bs = k_pool.shape[0], k_pool.shape[1]
@@ -314,6 +314,78 @@ def paged_attention(
     return dense_attention(q, k, v, cfg, mask=mask, gate_pi=gate_pi)
 
 
+def paged_attention(
+    q: Array,
+    k_pool: Array,
+    v_pool: Array,
+    block_table: Array,
+    cfg: AttentionConfig,
+    q_offset=0,
+    gate_pi: Optional[Array] = None,
+    *,
+    live_width: Optional[int] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Paged-KV attention dispatcher. Returns (B, Tq, Hq, Dh).
+
+    ``k_pool``/``v_pool``: (num_blocks, block_size, Hkv, Dh) global pools
+    shared by every batch row. ``block_table``: (B, W) int32 physical block
+    ids; entry j maps the row's logical token range
+    [j*block_size, (j+1)*block_size) onto pool block ``block_table[b, j]``,
+    with -1 marking an unallocated entry.
+
+    Two backends:
+
+      * ``"kernel"`` — the fused Pallas TPU kernel
+        (``repro.kernels.paged_attention``): pool blocks are read in place
+        through a scalar-prefetched block table; no gather, no materialized
+        virtual sequence. Default on TPU.
+      * ``"gather"`` — ``paged_attention_gather``, the XLA path that
+        materializes each row's virtual KV sequence. Bitwise-equal to dense
+        attention; the oracle the kernel is swept against, the fallback off
+        TPU (where the kernel would run in slow interpret mode), and the
+        path ``backend="auto"`` picks on CPU/GPU.
+
+    ``live_width``: optional static number of block-table entries actually
+    in use (allocation is prefix-dense — the scheduler fills tables from
+    entry 0). When given, only ``table[:, :live_width]`` is visited by
+    EITHER backend, making the per-tick cost proportional to live tokens
+    instead of the table width W. The clipped softmax's ``alpha`` is
+    resolved against the LOGICAL length W*block_size *before* slicing, so
+    the clip threshold gamma = -alpha/max_len is invariant to how many
+    blocks are live (and to ``live_width`` itself) — positions beyond the
+    live prefix are causally unreachable, so slicing is exact, not an
+    approximation.
+    """
+    b, w_full = block_table.shape
+    bs = k_pool.shape[1]
+    logical_len = w_full * bs
+    sm = cfg.softmax
+    if not sm.is_vanilla:
+        # pin gamma to the logical max_len: dense_attention and the kernel
+        # would otherwise resolve it from the (possibly sliced) KV axis
+        gamma, zeta = sm.resolve_gamma(logical_len), sm.zeta
+        cfg = dataclasses.replace(
+            cfg, softmax=ClippedSoftmaxConfig(gamma=gamma, zeta=zeta))
+    else:
+        gamma, zeta = 0.0, 1.0
+    if live_width is not None:
+        block_table = block_table[:, :max(1, min(int(live_width), w_full))]
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "gather"
+    if backend == "kernel":
+        from repro.kernels.paged_attention import paged_mha
+        return paged_mha(q, k_pool, v_pool, block_table, q_offset, gate_pi,
+                         causal=cfg.causal, window=cfg.window,
+                         softcap=cfg.logit_softcap, gamma=gamma, zeta=zeta,
+                         interpret=interpret)
+    if backend != "gather":
+        raise ValueError(f"unknown paged-attention backend {backend!r}")
+    return paged_attention_gather(q, k_pool, v_pool, block_table, cfg,
+                                  q_offset=q_offset, gate_pi=gate_pi)
+
+
 def attention(
     q: Array,
     k: Array,
@@ -323,9 +395,17 @@ def attention(
     gate_pi: Optional[Array] = None,
     force_dense: bool = False,
 ) -> Array:
-    """Dispatcher: dense for small problems / decode, chunked for long T."""
+    """Dispatcher: dense for small problems / decode, chunked for long T.
+
+    Routing (pinned by tests/test_attention.py::test_dispatcher_routing):
+    dense when forced, when decoding (tq == 1) with tk <= 8192, or when
+    tq > 1 and tq*tk <= 2048^2; chunked otherwise (long-T prefill/training
+    and long-context decode). The seed's condition chained these with an
+    unparenthesized ``... or tq == 1 and tk <= 8192`` — the precedence trap
+    this explicit form replaces — and ``force_dense`` did not actually
+    force for large tq*tk.
+    """
     tq, tk = q.shape[1], k.shape[1]
-    if force_dense or (tq * tk <= 4096 * 4096 and tq > 1) or tq == 1 and tk <= 8192:
-        if tq == 1 or tq * tk <= 2048 * 2048:
-            return dense_attention(q, k, v, cfg, q_offset=q_offset, gate_pi=gate_pi)
+    if force_dense or (tq == 1 and tk <= 8192) or (tq > 1 and tq * tk <= 2048 * 2048):
+        return dense_attention(q, k, v, cfg, q_offset=q_offset, gate_pi=gate_pi)
     return chunked_attention(q, k, v, cfg, q_offset=q_offset, gate_pi=gate_pi)

@@ -8,8 +8,10 @@ from repro.kernels.ops import (
     quantize_weights_int8,
     rglru_op,
 )
+from repro.kernels.paged_attention import paged_flash_attention, paged_mha
 
 __all__ = [
     "default_interpret", "fake_quant_op", "linear_w8a8", "mha_flash",
-    "on_tpu", "quantize_weights_int8", "rglru_op",
+    "on_tpu", "paged_flash_attention", "paged_mha", "quantize_weights_int8",
+    "rglru_op",
 ]

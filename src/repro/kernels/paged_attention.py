@@ -1,0 +1,299 @@
+"""Pallas TPU paged-attention decode kernel: in-place block-pool reads.
+
+TPU twin of ``repro.core.attention.paged_attention``'s gather path,
+specialized for serving decode (Tq = 1..small) over the paged KV cache
+(vLLM/PagedAttention pattern). The gather path materializes every row's
+virtual KV sequence — a (B, W*block_size, Hkv, Dh) tensor per layer per
+tick — before attending; this kernel never does. K/V stay in the global
+pools ``(num_blocks, block_size, Hkv, Dh)`` and each grid step DMAs ONE
+physical pool block straight into VMEM, addressed through a scalar-
+prefetched per-row block table (``pltpu.PrefetchScalarGridSpec``): the
+table and per-row ``q_offset`` vector land in SMEM before the grid runs,
+so the k/v BlockSpec index_map can read ``table[b, w]`` to pick the pool
+block for logical entry ``w``. No gather, no virtual sequence, per-tick
+HBM traffic proportional to blocks actually visited.
+
+Grid: ``(B, Hkv, W)`` with the block-table dimension innermost and
+sequential ("arbitrary" TPU semantics), so the f32 VMEM scratch carries the
+online-softmax state across a row's blocks. All ``G = Hq/Hkv`` query heads
+of one KV head are processed together as a (Tq*G, Dh) tile — the GQA twin
+of the flash kernel's (block_q, d) tile, and the moral equivalent of
+vLLM's head-packing (one pool block read serves the whole query group).
+
+Semantics match the gather oracle exactly:
+
+  * causal + local-window masks over *logical* positions built from the
+    prefetched per-row ``q_offset`` (scalar or (B,) vector);
+  * unallocated table entries (id < 0) contribute nothing (the index_map
+    clamps the pool read to a safe block, the kernel masks it out);
+  * logit soft-capping;
+  * vanilla softmax = single online pass; the paper's clipped softmax =
+    the same TWO streaming passes as ``kernels/flash_attention.py``
+    (pass 1 emits the per-query (m, Z), pass 2 re-streams the blocks and
+    accumulates clip((zeta-gamma)·p + gamma, 0, 1) @ V). ``gamma`` must be
+    resolved by the caller from the LOGICAL ``max_len`` (the dispatcher in
+    ``core.attention`` does this) so clipping thresholds are invariant to
+    how many blocks happen to be live;
+  * the per-head gate ``pi`` multiplies the output tile in the epilogue.
+
+Accumulation is f32 blockwise streaming, so results match the gather
+oracle to f32 round-off of the differing reduction order (~1 ulp per
+accumulated block; tests assert atol=2e-5 f32 / 2e-2 bf16), not bitwise.
+
+Oracle: ``paged_attention(..., backend="gather")``; swept over dtypes, GQA
+ratios, masks, (gamma, zeta), ragged per-row positions and partial tail
+blocks in tests/test_paged_kernel.py (interpret mode on CPU; TPU is the
+target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _scores(tbl_ref, off_ref, q_ref, k_ref, *, cfg):
+    """(Tq*G, BS) masked scores of one (row, kv-head, table-entry) step."""
+    b, h, w = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)               # (Tq*G, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (BS, Dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * cfg["scale"]
+    if cfg["softcap"] is not None:
+        s = cfg["softcap"] * jnp.tanh(s / cfg["softcap"])
+    tq_g, bs = cfg["tq_g"], cfg["block_size"]
+    # query row r serves head-group lane r % G of query token r // G
+    q_pos = off_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (tq_g, bs), 0) // cfg["group"]
+    k_pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, (tq_g, bs), 1)
+    mask = jnp.full((tq_g, bs), tbl_ref[b, w] >= 0)   # unallocated entry
+    if cfg["causal"]:
+        mask &= k_pos <= q_pos
+    if cfg["window"] is not None:
+        mask &= k_pos > q_pos - cfg["window"]
+    return jnp.where(mask, s, NEG_INF), mask
+
+
+def _vanilla_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, gate_ref, o_ref,
+                    m_scr, z_scr, acc_scr, *, cfg):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    z_scr[...] = z_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(w == cfg["n_w"] - 1)
+    def _():
+        out = acc_scr[...] / jnp.maximum(z_scr[...], 1e-30)[:, None]
+        if gate_ref is not None:
+            out = out * gate_ref[0, 0][:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _mz_kernel(tbl_ref, off_ref, q_ref, k_ref, m_ref, z_ref, m_scr, z_scr,
+               *, cfg):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    z_scr[...] = z_scr[...] * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(w == cfg["n_w"] - 1)
+    def _():
+        m_ref[0, 0] = m_scr[...]
+        z_ref[0, 0] = z_scr[...]
+
+
+def _av_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, m_ref, z_ref, gate_ref,
+               o_ref, acc_scr, *, cfg):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    m = m_ref[0, 0]
+    z = jnp.maximum(z_ref[0, 0], 1e-30)
+    p = jnp.exp(s - m[:, None]) / z[:, None]
+    p = jnp.clip((cfg["zeta"] - cfg["gamma"]) * p + cfg["gamma"], 0.0, 1.0)
+    p = jnp.where(mask, p, 0.0)
+    acc_scr[...] += jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(w == cfg["n_w"] - 1)
+    def _():
+        out = acc_scr[...]
+        if gate_ref is not None:
+            out = out * gate_ref[0, 0][:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_flash_attention(
+    q: jax.Array,            # (B, Hkv, Tq*G, Dh) — head-grouped queries
+    k_pool: jax.Array,       # (NB, BS, Hkv, Dh) — global block pool
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, W) int32 physical block ids, -1 = unalloc
+    q_off: jax.Array,        # (B,) int32 logical position of query row 0
+    gate_pi: Optional[jax.Array] = None,    # (B, Hkv, Tq*G)
+    *,
+    group: int = 1,          # G = Hq // Hkv (query rows per logical token)
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    gamma: float = 0.0,
+    zeta: float = 1.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused paged attention; (gamma, zeta) = (0, 1) selects the single-pass
+    vanilla path, anything else the two-pass clipped path. ``gamma`` must
+    already be resolved from the logical max_len (see module docstring)."""
+    b, hkv, tq_g, dh = q.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    w = block_table.shape[1]
+    grid = (b, hkv, w)
+    cfg = dict(scale=dh ** -0.5, causal=causal, window=window,
+               softcap=softcap, gamma=gamma, zeta=zeta, n_w=w,
+               tq_g=tq_g, block_size=bs, group=group)
+
+    table = block_table.astype(jnp.int32)
+    off = q_off.astype(jnp.int32)
+
+    # the index_map receives (grid ids..., scalar-prefetch refs...); the
+    # clamp keeps unallocated (-1) entries a safe in-range DMA — the kernel
+    # masks their contribution out via tbl_ref[b, w] >= 0
+    def kv_index(bi, hi, wi, tbl, _off):
+        return (jnp.clip(tbl[bi, wi], 0, nb - 1), 0, hi, 0)
+
+    q_spec = pl.BlockSpec((1, 1, tq_g, dh),
+                          lambda bi, hi, wi, tbl, off_: (bi, hi, 0, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, dh), kv_index)
+    o_spec = pl.BlockSpec((1, 1, tq_g, dh),
+                          lambda bi, hi, wi, tbl, off_: (bi, hi, 0, 0))
+    mz_spec = pl.BlockSpec((1, 1, tq_g),
+                           lambda bi, hi, wi, tbl, off_: (bi, hi, 0))
+    has_gate = gate_pi is not None
+
+    def call(kern, in_specs, args, out_specs, out_shape, scratch):
+        return pl.pallas_call(
+            kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                scratch_shapes=scratch,
+            ),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(table, off, *args)
+
+    if gamma == 0.0 and zeta == 1.0:
+        if has_gate:
+            kern = functools.partial(_vanilla_kernel, cfg=cfg)
+            in_specs = [q_spec, kv_spec, kv_spec, mz_spec]
+            args = (q, k_pool, v_pool, gate_pi)
+        else:
+            kern = functools.partial(
+                lambda t, of, qr, kr, vr, o, m, z, a, cfg: _vanilla_kernel(
+                    t, of, qr, kr, vr, None, o, m, z, a, cfg=cfg), cfg=cfg)
+            in_specs = [q_spec, kv_spec, kv_spec]
+            args = (q, k_pool, v_pool)
+        return call(
+            kern, in_specs, args, o_spec,
+            jax.ShapeDtypeStruct((b, hkv, tq_g, dh), q.dtype),
+            [pltpu.VMEM((tq_g,), jnp.float32),
+             pltpu.VMEM((tq_g,), jnp.float32),
+             pltpu.VMEM((tq_g, dh), jnp.float32)])
+
+    # ---- clipped softmax: 2 streaming passes over the block table ----
+    m, z = call(
+        functools.partial(_mz_kernel, cfg=cfg),
+        [q_spec, kv_spec], (q, k_pool),
+        [mz_spec, mz_spec],
+        [jax.ShapeDtypeStruct((b, hkv, tq_g), jnp.float32),
+         jax.ShapeDtypeStruct((b, hkv, tq_g), jnp.float32)],
+        [pltpu.VMEM((tq_g,), jnp.float32),
+         pltpu.VMEM((tq_g,), jnp.float32)])
+
+    if has_gate:
+        kern = functools.partial(_av_kernel, cfg=cfg)
+        in_specs = [q_spec, kv_spec, kv_spec, mz_spec, mz_spec, mz_spec]
+        args = (q, k_pool, v_pool, m, z, gate_pi)
+    else:
+        kern = functools.partial(
+            lambda t, of, qr, kr, vr, mr, zr, o, a, cfg: _av_kernel(
+                t, of, qr, kr, vr, mr, zr, None, o, a, cfg=cfg), cfg=cfg)
+        in_specs = [q_spec, kv_spec, kv_spec, mz_spec, mz_spec]
+        args = (q, k_pool, v_pool, m, z)
+    return call(
+        kern, in_specs, args, o_spec,
+        jax.ShapeDtypeStruct((b, hkv, tq_g, dh), q.dtype),
+        [pltpu.VMEM((tq_g, dh), jnp.float32)])
+
+
+def paged_mha(
+    q: jax.Array,            # (B, Tq, Hq, Dh) — model layout
+    k_pool: jax.Array,       # (NB, BS, Hkv, Dh)
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, W)
+    q_offset=0,              # scalar or per-row (B,) int32
+    gate_pi: Optional[jax.Array] = None,    # (B, Tq, Hq)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    gamma: float = 0.0,
+    zeta: float = 1.0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Model-layout adapter: head-group the queries (all G query heads of a
+    KV head share one pool-block read) and invoke the kernel. Returns
+    (B, Tq, Hq, Dh) like ``dense_attention``."""
+    b, tq, hq, dh = q.shape
+    hkv = k_pool.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, tq, hkv, g, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, tq * g, dh)
+    gf = None
+    if gate_pi is not None:
+        gf = gate_pi.reshape(b, tq, hkv, g).transpose(0, 2, 1, 3) \
+            .reshape(b, hkv, tq * g)
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = paged_flash_attention(
+        qf, k_pool, v_pool, block_table, off, gf, group=g, causal=causal,
+        window=window, softcap=softcap, gamma=gamma, zeta=zeta,
+        interpret=interpret)
+    return out.reshape(b, hkv, tq, g, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, tq, hq, dh)

@@ -106,6 +106,10 @@ class ModelConfig:
     softmax_cfg: ClippedSoftmaxConfig = ClippedSoftmaxConfig()
     gate_cfg: GateConfig = GateConfig(kind="none")
 
+    # paged-KV read path: "auto" (Pallas kernel on TPU, XLA gather
+    # elsewhere) | "kernel" | "gather" — see core.attention.paged_attention
+    paged_backend: str = "auto"
+
     # embedding / io
     tie_embeddings: bool = True
     embed_scale: bool = False                   # gemma: * sqrt(d_model)
@@ -245,6 +249,7 @@ def _attn_block_apply(
     cache: Optional[dict], pos,
     ctx: QuantContext, name: str,
     active: Optional[Array] = None,
+    paged_live_width: Optional[int] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     """Returns (x_out, new_cache, attn_layer_output, moe_aux); the attention
     layer output is the tensor whose outliers the paper measures."""
@@ -362,7 +367,9 @@ def _attn_block_apply(
 
     if paged_table is not None:
         attn_out = paged_attention(q, k_all, v_all, paged_table, acfg,
-                                   q_offset=q_offset, gate_pi=gate_pi)
+                                   q_offset=q_offset, gate_pi=gate_pi,
+                                   live_width=paged_live_width,
+                                   backend=cfg.paged_backend)
     elif explicit_mask is not None:
         attn_out = dense_attention(q, k_all, v_all, acfg, mask=explicit_mask,
                                    q_offset=q_offset, gate_pi=gate_pi)
@@ -383,7 +390,11 @@ def _attn_block_apply(
         h2 = norm_apply(cfg.norm, p["ln2"], x, ctx, name + "/ln2") \
             if cfg.norm_position == "pre" else x
         if cfg.moe is not None:
-            y2, moe_aux = moe_apply(p["moe"], h2, cfg.moe, ctx, name + "/moe")
+            # inactive decode rows must not claim expert capacity: their
+            # tokens would displace live rows' tokens in the dropping
+            # dispatch (slot-major priority), silently changing live outputs
+            y2, moe_aux = moe_apply(p["moe"], h2, cfg.moe, ctx, name + "/moe",
+                                    active=active)
         else:
             y2 = mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx, name + "/mlp")
         if cfg.post_block_norm:
@@ -403,10 +414,12 @@ def _block_apply(
     p: Params, x: Array, cfg: ModelConfig, kind: str,
     rope, cache, pos, ctx: QuantContext, name: str,
     active: Optional[Array] = None,
+    paged_live_width: Optional[int] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     if kind in ("attn", "local_attn"):
         return _attn_block_apply(p, x, cfg, kind, rope, cache, pos, ctx, name,
-                                 active=active)
+                                 active=active,
+                                 paged_live_width=paged_live_width)
     if kind == "griffin":
         h = norm_apply(cfg.norm, p["ln1"], x, ctx, name + "/ln1")
         y, new_state = griffin_block_apply(p["griffin"], h, cfg.rglru, cache, ctx, name + "/griffin")
@@ -589,6 +602,7 @@ def model_apply(
     pos: Any = 0,
     active: Optional[Array] = None,
     collect_acts: bool = False,
+    paged_live_width: Optional[int] = None,
 ) -> Tuple[Array, Dict[str, Any]]:
     """Forward pass.
 
@@ -603,7 +617,11 @@ def model_apply(
     (``init_paged_cache``: global block pools + per-row block tables, writes
     routed through ``block_table[pos // block_size]``); the layout is
     detected per layer from the cache leaves, and both produce bitwise
-    identical logits for the same tokens.
+    identical logits for the same tokens. ``paged_live_width`` (static int)
+    optionally bounds the paged READ path to the first N block-table
+    entries — allocation is prefix-dense, so the scheduler passes the
+    bucketed max blocks-in-use per tick and the attention cost tracks live
+    tokens instead of the table width (see ``paged_attention``).
     Returns (logits (B,T,vocab) f32, aux) where aux may contain
     "attn_outputs" (stacked per-layer residual values) and "cache".
     """
@@ -625,7 +643,8 @@ def model_apply(
         for i, kind in enumerate(cfg.pattern):
             c = None if gcache is None else gcache[f"b{i}"]
             x, nc, a, ba = _block_apply(gparams[f"b{i}"], x, cfg, kind, rope, c, pos,
-                                        ctx, f"layer_{kind}{i}", active=active)
+                                        ctx, f"layer_{kind}{i}", active=active,
+                                        paged_live_width=paged_live_width)
             new_gcache[f"b{i}"] = nc
             gacts.append(a)
             gaux = {k: gaux[k] + ba[k] for k in gaux}
@@ -677,7 +696,8 @@ def model_apply(
         for i, kind in enumerate(cfg.tail_pattern):
             c = None if cache is None else cache["tail"][f"t{i}"]
             x, nc, a, ta = _block_apply(params["tail"][f"t{i}"], x, cfg, kind, rope, c,
-                                        pos, ctx, f"tail_{kind}{i}", active=active)
+                                        pos, ctx, f"tail_{kind}{i}", active=active,
+                                        paged_live_width=paged_live_width)
             aux["moe_aux"] = {k: aux.get("moe_aux", _zero_aux())[k] + ta[k]
                               for k in ta}
             tcache_new[f"t{i}"] = nc

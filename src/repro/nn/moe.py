@@ -110,7 +110,8 @@ def _moe_dense(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
     return jnp.einsum("ned,ne->nd", y_all, combine)
 
 
-def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
+def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig,
+                  token_mask: Optional[Array] = None) -> Array:
     """Capacity-based dispatch via scatter/gather (dropless-style buffers).
 
     Per group of ``group_size`` tokens: each (token, slot) claims a position
@@ -120,17 +121,26 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
     one-hot tensors are materialized — peak extra memory is the (E, C, D)
     buffer itself, and FLOPs overhead over the pure expert matmuls is ~0
     (vs 60-100%% for the classic GShard einsum dispatch; see EXPERIMENTS.md
-    §Perf for the measured delta)."""
+    §Perf for the measured delta).
+
+    ``token_mask`` (N,) bool: dead tokens (inactive decode slot rows,
+    padding) neither claim a capacity position nor combine — without this,
+    a dead token ahead in slot-major order silently displaces a live
+    token's buffer slot and changes the live row's output."""
     n, d = x2d.shape
+    token_mask = jnp.ones((n,), jnp.bool_) if token_mask is None \
+        else token_mask.astype(jnp.bool_)
     gsz = min(cfg.group_size, n)
     n_groups = (n + gsz - 1) // gsz
     pad = n_groups * gsz - n
     if pad:
         x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
         top_p = jnp.pad(top_p, ((0, pad), (0, 0)))
-        # padded tokens: keep indices valid; their combine weight is 0
+        # padded tokens: keep indices valid; their combine weight is 0 and
+        # (via token_mask) they never claim a capacity position
         top_i = jnp.pad(top_i, ((0, pad), (0, 0)))
         top_p = top_p * (jnp.arange(n_groups * gsz) < n)[:, None]
+        token_mask = jnp.pad(token_mask, (0, pad))
     e, k = cfg.n_experts, cfg.top_k
     cap = max(int(cfg.capacity_factor * k * gsz / e), 4)
     cap = (cap + 7) // 8 * 8   # MXU-friendly
@@ -157,6 +167,7 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
     xg = maybe_constrain(x2d.reshape(n_groups, gsz, d), group_axes, None, None)
     pg = maybe_constrain(top_p.reshape(n_groups, gsz, k), group_axes, None, None)
     ig = maybe_constrain(top_i.reshape(n_groups, gsz, k), group_axes, None, None)
+    mg = token_mask.reshape(n_groups, gsz)
 
     # expert weights enter the dispatch region gathered over the FSDP axis
     # (classic ZeRO-3: gather weights once per layer, never the token
@@ -167,14 +178,17 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
     w_up = maybe_constrain(p["w_up"], None, None, w_tp)
     w_down = maybe_constrain(p["w_down"], None, w_tp, None)
 
-    def per_group(xs, ps, ix):
-        # position of each (slot, token) in its expert buffer, slot-major
+    def per_group(xs, ps, ix, ms):
+        # position of each (slot, token) in its expert buffer, slot-major;
+        # dead tokens (ms False) claim nothing and scatter out of bounds
         flat_e = ix.T.reshape(k * gsz)                               # (kG,)
-        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)        # (kG,E)
+        live = jnp.tile(ms, (k,))                                    # (kG,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32) \
+            * live[:, None].astype(jnp.float32)                      # (kG,E)
         pos = jnp.cumsum(onehot, axis=0) - onehot
         pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)      # (kG,)
         flat_idx = flat_e * cap + pos
-        flat_idx = jnp.where(pos < cap, flat_idx, e * cap)          # OOB -> drop
+        flat_idx = jnp.where(live & (pos < cap), flat_idx, e * cap)  # OOB -> drop
         # scatter tokens into expert buffers (device-local: the group axis
         # is vmapped with spmd_axis_name=dp, so these constraints pin every
         # intermediate to "this group's shard")
@@ -189,7 +203,7 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
         yb = maybe_constrain(yb.reshape(e * cap, d), None, None)
         # gather + weighted combine
         yt = jnp.take(yb, jnp.clip(flat_idx, 0, e * cap - 1), axis=0)
-        keep = (pos < cap)[:, None].astype(yt.dtype)
+        keep = ((pos < cap) & live)[:, None].astype(yt.dtype)
         w = ps.T.reshape(k * gsz, 1).astype(yt.dtype)
         contrib = (yt * keep * w).reshape(k, gsz, d)
         return jnp.sum(contrib, axis=0)
@@ -206,21 +220,32 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig) -> Array:
     except Exception:  # noqa: BLE001
         spmd_axes = None
     vm = jax.vmap(per_group, spmd_axis_name=spmd_axes) if spmd_axes else jax.vmap(per_group)
-    y = vm(xg, pg, ig)
+    y = vm(xg, pg, ig, mg)
     y = maybe_constrain(y, group_axes, None, None).reshape(n_groups * gsz, d)
     return y[:n] if pad else y
 
 
 def moe_apply(p: Params, x: Array, cfg: MoEConfig, ctx: QuantContext = NO_QUANT,
-              name: str = "moe") -> Tuple[Array, Dict[str, Array]]:
-    """x: (B, T, D) -> (y, aux_losses)."""
+              name: str = "moe", active: Optional[Array] = None,
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, T, D) -> (y, aux_losses).
+
+    ``active``: optional (B,) bool decode-slot mask. Tokens of inactive
+    rows are masked out of the router outputs AND the dispatch capacity
+    accounting, so a dead slot row cannot displace live rows' tokens from
+    expert buffers (its own output is garbage either way — the serving
+    engine drops dead rows' state writes)."""
     b, t, d = x.shape
     x2d = ctx.act(name + "/in", x.reshape(b * t, d))
     top_p, top_i, aux = _router(p, x2d, cfg, ctx, name)
+    token_mask = None
+    if active is not None:
+        token_mask = jnp.repeat(active.astype(jnp.bool_), t)
+        top_p = top_p * token_mask[:, None].astype(top_p.dtype)
     if cfg.exec_mode == "dense":
         y = _moe_dense(p, x2d, top_p, top_i, cfg)
     else:
-        y = _moe_dispatch(p, x2d, top_p, top_i, cfg)
+        y = _moe_dispatch(p, x2d, top_p, top_i, cfg, token_mask=token_mask)
     if cfg.n_shared_experts > 0:
         from repro.nn.mlp import mlp_apply
         y = y + mlp_apply(p["shared"], x2d, cfg.mlp_kind, ctx, name + "/shared")

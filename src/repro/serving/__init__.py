@@ -4,10 +4,12 @@ from repro.serving.decode import (
     generate,
     prefill,
     sample_logits,
+    sample_rows,
+    sample_token_at,
 )
 
 __all__ = ["GenerateConfig", "decode_one", "generate", "prefill",
-           "sample_logits"]
+           "sample_logits", "sample_rows", "sample_token_at"]
 from repro.serving.scheduler import (  # noqa: E402
     BlockAllocator,
     ContinuousBatcher,

@@ -64,6 +64,34 @@ def sample_logits(logits: Array, gen: GenerateConfig,
     return jax.random.categorical(key, logits / gen.temperature).astype(jnp.int32)
 
 
+def sample_token_at(logits: Array, gen: GenerateConfig, key: Array,
+                    target_pos) -> Array:
+    """(vocab,) logits -> () int32 token id for ONE row, keyed by the
+    token's absolute position.
+
+    The continuous batcher's sampling rule: the token that will sit at
+    logical position p is drawn with ``fold_in(request_key, p)``. Keying by
+    *position* rather than by draw order makes sampling a pure function of
+    (request seed, position), so a preempted request recomputed from its
+    prompt + generated-so-far resamples the identical continuation — the
+    sampling analogue of the greedy recompute-resume guarantee."""
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jax.random.fold_in(key, jnp.asarray(target_pos, jnp.int32))
+    return sample_logits(logits[None], gen, k)[0]
+
+
+def sample_rows(logits: Array, gen: GenerateConfig, keys: Array,
+                target_pos: Array) -> Array:
+    """Per-row batched ``sample_token_at``: (B, vocab) logits, (B, 2)
+    uint32 per-request keys, (B,) target positions -> (B,) int32 tokens.
+    The fused-tick sampler of ``ContinuousBatcher``."""
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda l, k, p: sample_token_at(l, gen, k, p))(
+        logits, keys, target_pos)
+
+
 def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
     """Run the prompt through the model, building the KV cache.
 

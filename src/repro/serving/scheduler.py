@@ -28,7 +28,18 @@ Two KV-cache backends, selected by ``paged``:
     NO row can advance, the most recently admitted stalled row is preempted
     vLLM-style: its blocks are freed and the request is re-queued at the
     front for recompute-resume (re-prefill of prompt + tokens generated so
-    far — greedy decode makes the resumed continuation exact).
+    far — greedy decode, and position-keyed sampling where the token at
+    position p is drawn with ``fold_in(request_seed, p)``, make the resumed
+    continuation exact).
+
+The decode tick samples with ``GenerateConfig`` parity: pass ``gen=`` for
+temperature/top-k (greedy by default) and ``Request.seed`` for per-request
+reproducibility. In paged mode each tick passes a bucketed *live width* —
+the max blocks any row holds, rounded to a power of two — as a static
+argument, so the paged attention read (Pallas kernel on TPU, XLA gather
+elsewhere; see ``core.attention.paged_attention``) only visits the
+allocated block-table prefix and the tick cost tracks live tokens, not the
+table width.
 
 The per-row ``pos`` vector / masked-scatter contract the decode step relies
 on is documented in ``repro.models.transformer.model_apply`` and
@@ -54,6 +65,7 @@ from repro.models.transformer import (
     init_paged_cache,
     model_apply,
 )
+from repro.serving.decode import GenerateConfig, sample_rows, sample_token_at
 
 Array = jax.Array
 
@@ -65,6 +77,9 @@ class Request:
     uid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int = 32
+    # per-request sampling seed (used when the batcher's GenerateConfig has
+    # temperature > 0); None derives a deterministic default from uid
+    seed: Optional[int] = None
     # filled by the scheduler
     output: Optional[np.ndarray] = None
     # internal: tokens generated before a preemption (recompute-resume state)
@@ -78,6 +93,7 @@ class _Slot:
     generated: List[int] = dataclasses.field(default_factory=list)
     blocks: List[int] = dataclasses.field(default_factory=list)  # paged only
     order: int = 0                   # admission sequence number
+    key: Optional[np.ndarray] = None  # (2,) uint32 request PRNG key
 
 
 class BlockAllocator:
@@ -133,12 +149,17 @@ class ContinuousBatcher:
     def __init__(self, params, cfg: ModelConfig, batch_size: int,
                  max_len: int, eos_id: Optional[int] = None,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None) -> None:
+                 num_blocks: Optional[int] = None,
+                 gen: Optional[GenerateConfig] = None) -> None:
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.L = max_len
-        self.eos_id = eos_id
+        # sampling config for the fused tick (greedy by default — parity
+        # with GenerateConfig's temperature/top-k knobs; per-request seeds
+        # come from Request.seed). eos_id arg wins over gen.eos_id.
+        self._gen = gen if gen is not None else GenerateConfig()
+        self.eos_id = eos_id if eos_id is not None else self._gen.eos_id
         self.paged = paged
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: List[Request] = []
@@ -182,16 +203,25 @@ class ContinuousBatcher:
         self._batch_free = jax.tree_util.tree_map(
             lambda a, b: a.shape == b.shape, spec1, spec2)
 
-        def _decode(params, cache, tokens, pos, active):
+        gen_cfg = self._gen
+
+        def _decode(params, cache, tokens, pos, active, keys, live_width):
             # one fused step: every row decodes at its own position; writes
             # of inactive rows are dropped inside model_apply (masked
             # per-row scatter), so idle cache rows are never clobbered.
+            # ``live_width`` (static) bounds the paged attention read to the
+            # allocated block-table prefix; ``keys`` are per-request PRNG
+            # keys — the sampled token at position p is fold_in(key, p), so
+            # recompute-resume replays identical samples (see decode.py).
             logits, aux = model_apply(params, cfg, {"tokens": tokens},
-                                      cache=cache, pos=pos, active=active)
-            next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                                      cache=cache, pos=pos, active=active,
+                                      paged_live_width=live_width)
+            next_tok = sample_rows(logits[:, -1, :], gen_cfg, keys, pos + 1)
             return next_tok, aux["cache"]
 
-        self._decode = jax.jit(_decode)
+        self._decode = jax.jit(_decode, static_argnums=(6,))
+        self._first_token = jax.jit(
+            lambda logits, key, t: sample_token_at(logits, gen_cfg, key, t))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -292,13 +322,19 @@ class ContinuousBatcher:
             # place; batch-led state (dense/ring KV, recurrent) comes back
             # batch-1 and is inserted at row i
             self._merge_row(aux["cache"], i)
+            key = np.asarray(jax.random.PRNGKey(
+                req.seed if req.seed is not None else req.uid))
             if resume:
                 gen = list(resume)
                 req.resume_generated = None
             else:
-                gen = [int(jnp.argmax(logits[0, -1]))]
+                # the first generated token sits at position t: same
+                # position-keyed rule as the tick, so admission and decode
+                # draw from one coherent per-request stream
+                gen = [int(self._first_token(logits[0, -1],
+                                             jnp.asarray(key), t))]
             self.slots[i] = _Slot(req=req, pos=t, generated=gen,
-                                  blocks=blocks, order=self._order)
+                                  blocks=blocks, order=self._order, key=key)
             self._order += 1
 
     def _preempt(self, i: int) -> None:
@@ -360,6 +396,20 @@ class ContinuousBatcher:
             self._preempt(max(preemptable,
                               key=lambda i: self.slots[i].order))
 
+    def _live_width(self) -> Optional[int]:
+        """Static block-table read width for this tick: the max blocks any
+        occupied slot holds, rounded up to a power of two (so at most
+        log2(W)+1 distinct jit specializations exist). Allocation is
+        prefix-dense — tables fill from entry 0 — so every live token of
+        every row sits inside the first ``live_width`` entries and slicing
+        the READ path there is exact. Returns None in dense mode."""
+        if not self.paged:
+            return None
+        held = max((len(s.blocks) for s in self.slots if s.req is not None),
+                   default=1)
+        lw = 1 if held <= 1 else 1 << (held - 1).bit_length()
+        return min(lw, self.tables.shape[1])
+
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
             if s.req is None:
@@ -399,6 +449,8 @@ class ContinuousBatcher:
         pos = np.asarray([s.pos for s in self.slots], np.int32)
         active = np.zeros((self.B,), bool)
         active[run_idx] = True
+        keys = np.stack([s.key if s.key is not None
+                         else np.zeros((2,), np.uint32) for s in self.slots])
         if self.paged and self._tables_dirty:
             self.cache = _with_tables(self.cache, jnp.asarray(self.tables))
             self._tables_dirty = False
@@ -407,7 +459,8 @@ class ContinuousBatcher:
         # the dense one: no table upload, no tree surgery
         next_tok, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(last_tok)[:, None],
-            jnp.asarray(pos), jnp.asarray(active))
+            jnp.asarray(pos), jnp.asarray(active), jnp.asarray(keys),
+            self._live_width())
         nt = np.asarray(next_tok)
         for i in run_idx:
             self.slots[i].generated.append(int(nt[i]))

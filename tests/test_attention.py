@@ -70,6 +70,40 @@ def test_gate_pi_scales_output():
     np.testing.assert_allclose(gated, 0.5 * base, atol=1e-6)
 
 
+def test_dispatcher_routing(monkeypatch):
+    """Pin `attention`'s dense/chunked routing. Regression for the
+    precedence trap `... or tq == 1 and tk <= 8192` (the `and` bound
+    tighter than intended reads suggested): decode with a long KV axis must
+    stream, not materialize (Tq, Tk)."""
+    import sys
+
+    import repro.core.attention  # noqa: F401 — repro.core re-exports the
+    A = sys.modules["repro.core.attention"]  # fn `attention`, shadowing it
+
+    routed = []
+    monkeypatch.setattr(A, "dense_attention",
+                        lambda *a, **k: routed.append("dense"))
+    monkeypatch.setattr(A, "chunked_attention",
+                        lambda *a, **k: routed.append("chunked"))
+    cfg = AttentionConfig(n_heads=1, n_kv_heads=1, d_head=4)
+
+    def route(tq, tk, force_dense=False):
+        routed.clear()
+        q = jnp.zeros((1, tq, 1, 4))
+        kv = jnp.zeros((1, tk, 1, 4))
+        A.attention(q, kv, kv, cfg, force_dense=force_dense)
+        return routed[0]
+
+    assert route(1, 512) == "dense"          # decode, short KV
+    assert route(1, 8192) == "dense"         # decode, at the dense cap
+    assert route(1, 8193) == "chunked"       # decode, long KV -> stream
+    assert route(64, 512) == "dense"         # small prefill
+    assert route(2048, 2048) == "dense"      # at the inner dense cap
+    assert route(3000, 3000) == "chunked"    # mid region streams
+    assert route(8192, 8192) == "chunked"    # large prefill streams
+    assert route(8192, 8192, force_dense=True) == "dense"
+
+
 def test_clipped_rows_not_normalized():
     """Clipped softmax rows may sum < 1 (the no-op capability)."""
     q, k, v = _qkv(t=8)

@@ -1,0 +1,209 @@
+"""Pallas paged-attention decode kernel vs the XLA gather oracle
+(``paged_attention(..., backend="gather")``), interpret mode on CPU.
+
+The sweep covers the full attention contract the gather path owns: GQA
+ratios, causal + local-window masks over logical positions from ragged
+per-row ``q_offset`` vectors, unallocated (-1) table entries, partially
+filled tail blocks, logit soft-capping, vanilla vs clipped softmax
+(gamma/zeta, including alpha-resolved gamma) vs gated attention, dtypes,
+and the static ``live_width`` prefix slicing the scheduler uses.
+
+Accumulation order differs (blockwise streaming vs materialized einsum),
+so agreement is to f32 round-off (atol 2e-5; bf16 2e-2), not bitwise —
+see kernels/paged_attention.py's module docstring.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionConfig, paged_attention
+from repro.core.softmax import ClippedSoftmaxConfig
+from repro.kernels.paged_attention import paged_mha
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _case(b=3, w=4, bs=8, hq=4, hkv=2, dh=16, tq=1, dtype=jnp.float32,
+          seed=0, ragged=True):
+    """Random pool + scrambled prefix-dense tables + ragged positions.
+
+    Rows sit at unrelated positions; each owns exactly the blocks covering
+    [0, pos + tq), so the last owned block is partially filled whenever
+    pos + tq is not a block multiple."""
+    nb = b * w + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, tq, hq, dh), dtype)
+    k_pool = jax.random.normal(ks[1], (nb, bs, hkv, dh), dtype)
+    v_pool = jax.random.normal(ks[2], (nb, bs, hkv, dh), dtype)
+    rng = np.random.default_rng(seed)
+    max_pos = w * bs - tq
+    pos = rng.integers(0, max_pos + 1, size=b) if ragged \
+        else np.full(b, max_pos // 2)
+    table = np.full((b, w), -1, np.int32)
+    perm = rng.permutation(nb)
+    nxt = 0
+    for i in range(b):
+        need = -(-(int(pos[i]) + tq) // bs)        # ceil: partial tail block
+        table[i, :need] = perm[nxt:nxt + need]
+        nxt += need
+    gate = jax.nn.sigmoid(jax.random.normal(ks[3], (b, tq, hq))).astype(dtype)
+    return (q, k_pool, v_pool, jnp.asarray(table),
+            jnp.asarray(pos, jnp.int32), gate)
+
+
+def _check(q, k_pool, v_pool, table, pos, cfg, gate=None, live_width=None,
+           atol=2e-5):
+    ref = paged_attention(q, k_pool, v_pool, table, cfg, q_offset=pos,
+                          gate_pi=gate, backend="gather",
+                          live_width=live_width)
+    out = paged_attention(q, k_pool, v_pool, table, cfg, q_offset=pos,
+                          gate_pi=gate, backend="kernel", interpret=True,
+                          live_width=live_width)
+    assert out.dtype == ref.dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+SOFTMAXES = [
+    ClippedSoftmaxConfig(),
+    ClippedSoftmaxConfig(gamma=-0.03),
+    ClippedSoftmaxConfig(gamma=-0.01, zeta=1.03),
+    ClippedSoftmaxConfig(alpha=4.0),
+]
+
+
+class TestPagedKernelFast:
+    """Small fixed cases per variant — fast tier (`-m "not slow"`)."""
+
+    @pytest.mark.parametrize("sm", SOFTMAXES)
+    def test_softmax_variants_ragged_positions(self, sm):
+        q, kp, vp, tbl, pos, _ = _case()
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16, softmax=sm)
+        _check(q, kp, vp, tbl, pos, cfg)
+
+    def test_gated_clipped(self):
+        q, kp, vp, tbl, pos, gate = _case()
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(gamma=-0.03))
+        _check(q, kp, vp, tbl, pos, cfg, gate=gate)
+
+    def test_local_window(self):
+        q, kp, vp, tbl, pos, _ = _case(w=6)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16, window=11,
+                              softmax=ClippedSoftmaxConfig(gamma=-0.02))
+        _check(q, kp, vp, tbl, pos, cfg)
+
+    def test_softcap(self):
+        q, kp, vp, tbl, pos, _ = _case()
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              logit_softcap=30.0,
+                              softmax=ClippedSoftmaxConfig(alpha=4.0))
+        _check(q, kp, vp, tbl, pos, cfg)
+
+    def test_live_width_slicing_exact(self):
+        """Slicing the read to the allocated prefix must not change the
+        result — including the alpha-resolved clip threshold, which is
+        pinned to the LOGICAL length before slicing."""
+        q, kp, vp, tbl, pos, _ = _case(w=8, seed=3)
+        held = int(np.max(np.sum(np.asarray(tbl) >= 0, axis=1)))
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(alpha=4.0))
+        full = paged_attention(q, kp, vp, tbl, cfg, q_offset=pos,
+                               backend="gather")
+        for backend in ("gather", "kernel"):
+            sliced = paged_attention(q, kp, vp, tbl, cfg, q_offset=pos,
+                                     backend=backend, interpret=True,
+                                     live_width=held)
+            np.testing.assert_allclose(np.asarray(sliced), np.asarray(full),
+                                       atol=2e-5, err_msg=backend)
+
+    def test_bf16(self):
+        q, kp, vp, tbl, pos, gate = _case(dtype=jnp.bfloat16)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(gamma=-0.02))
+        _check(q, kp, vp, tbl, pos, cfg, gate=gate, atol=2e-2)
+
+    def test_unallocated_row_outputs_zero(self):
+        """A row whose table is all -1 (never admitted) attends to nothing:
+        both backends emit exact zeros for it."""
+        q, kp, vp, tbl, pos, _ = _case()
+        tbl = tbl.at[1].set(-1)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(gamma=-0.03))
+        for backend in ("gather", "kernel"):
+            out = paged_attention(q, kp, vp, tbl, cfg, q_offset=pos,
+                                  backend=backend, interpret=True)
+            assert not np.asarray(out[1]).any(), backend
+
+
+class TestPagedKernelSweep:
+    """Wider parametrized sweep — slow tier."""
+
+    pytestmark = pytest.mark.slow
+
+    @pytest.mark.parametrize("group", [1, 2, 4])
+    @pytest.mark.parametrize("sm", SOFTMAXES)
+    @pytest.mark.parametrize("window", [None, 13])
+    def test_gqa_window_softmax(self, group, sm, window):
+        hkv = 2
+        q, kp, vp, tbl, pos, gate = _case(hq=group * hkv, hkv=hkv, w=5,
+                                          seed=group)
+        cfg = AttentionConfig(n_heads=group * hkv, n_kv_heads=hkv, d_head=16,
+                              window=window, softmax=sm)
+        _check(q, kp, vp, tbl, pos, cfg, gate=gate)
+
+    @pytest.mark.parametrize("tq", [2, 5])
+    def test_multi_token_query_block(self, tq):
+        """Tq > 1 (speculative / chunked-prefill shapes): causal masking
+        inside the query block over logical positions."""
+        q, kp, vp, tbl, pos, gate = _case(tq=tq, w=5, seed=tq)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(alpha=4.0))
+        _check(q, kp, vp, tbl, pos, cfg, gate=gate)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_tables(self, seed):
+        q, kp, vp, tbl, pos, _ = _case(b=4, w=7, bs=4, seed=10 + seed)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(gamma=-0.05))
+        _check(q, kp, vp, tbl, pos, cfg)
+
+    def test_scalar_offset(self):
+        q, kp, vp, tbl, pos, _ = _case(b=2, ragged=False)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16)
+        _check(q, kp, vp, tbl, int(pos[0]), cfg)
+
+
+class TestKernelEndToEnd:
+    @pytest.mark.slow
+    def test_batcher_tokens_identical_with_kernel_backend(self):
+        """The whole serving stack over the Pallas read path (interpret
+        mode) emits the same greedy tokens as the gather path / sequential
+        generate — the kernel drops into the fused tick unchanged."""
+        from repro.models import model_init
+        from repro.models.transformer import ModelConfig
+        from repro.serving import ContinuousBatcher, GenerateConfig, Request, generate
+
+        base = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                           n_kv_heads=2, d_ff=64, vocab_size=64, pos="rope",
+                           max_seq_len=1024, scan_layers=False, remat=False,
+                           mlp_kind="swiglu", norm="rmsnorm",
+                           softmax_cfg=ClippedSoftmaxConfig(alpha=4.0))
+        params = model_init(KEY, base)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(4, 60, size=n).astype(np.int32)
+                   for n in (6, 4)]
+        refs = [np.asarray(generate(params, base, jnp.asarray(p)[None, :],
+                                    GenerateConfig(max_new_tokens=5))[0, len(p):])
+                for p in prompts]
+        cfg = dataclasses.replace(base, paged_backend="kernel")
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=32,
+                              paged=True, block_size=8)
+        for u, p in enumerate(prompts):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=5))
+        out = {r.uid: r.output for r in b.run()}
+        for u, ref in enumerate(refs):
+            np.testing.assert_array_equal(out[u], ref, err_msg=f"uid={u}")

@@ -189,6 +189,70 @@ class TestSchedulerEndToEnd:
             # ...and its own decode write did land this tick
             assert np.any(ka[pos0] != kb[pos0]) or np.any(va[pos0] != vb[pos0])
 
+class TestBatcherSampling:
+    """GenerateConfig parity in the fused tick: temperature/top-k sampling
+    with per-request seeds, position-keyed so scheduling cannot change a
+    request's continuation."""
+
+    def _run(self, params, cfg, prompts, max_new, seeds, **kw):
+        b = ContinuousBatcher(params, cfg,
+                              gen=GenerateConfig(temperature=0.8, top_k=16),
+                              **kw)
+        for u, (p, m) in enumerate(zip(prompts, max_new)):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=m,
+                             seed=seeds[u]))
+        return {r.uid: r.output for r in b.run()}
+
+    @pytest.mark.slow
+    def test_seeded_sampling_invariant_to_scheduling(self):
+        """Same seeds -> identical outputs across batch sizes and cache
+        backends: the sample at position p is fold_in(seed, p), a pure
+        function of the request, not of slot assignment or tick order."""
+        cfg, params = _setup()
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(4, 60, size=n).astype(np.int32)
+                   for n in (5, 3, 8)]
+        max_new = [6, 8, 5]
+        seeds = [101, 102, 103]
+        ref = self._run(params, cfg, prompts, max_new, seeds,
+                        batch_size=2, max_len=32)
+        for kw in (dict(batch_size=3, max_len=32),
+                   dict(batch_size=2, max_len=32, paged=True, block_size=8)):
+            out = self._run(params, cfg, prompts, max_new, seeds, **kw)
+            for u in ref:
+                np.testing.assert_array_equal(out[u], ref[u],
+                                              err_msg=f"uid={u} {kw}")
+
+    @pytest.mark.slow
+    def test_sampled_preemption_resumes_exactly(self):
+        """Recompute-preemption under temperature sampling: position-keyed
+        draws make the resumed continuation identical to an un-preempted
+        run (the sampling analogue of the greedy resume guarantee)."""
+        cfg, params = _setup()
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(4, 60, size=8).astype(np.int32)
+                   for _ in range(2)]
+        max_new = [12, 12]
+        seeds = [5, 6]
+        roomy = self._run(params, cfg, prompts, max_new, seeds,
+                          batch_size=2, max_len=32, paged=True, block_size=4)
+        # 6-block pool: both rows grow to 5 blocks -> forced preemption
+        tight = self._run(params, cfg, prompts, max_new, seeds,
+                          batch_size=2, max_len=32, paged=True, block_size=4,
+                          num_blocks=6)
+        for u in roomy:
+            np.testing.assert_array_equal(tight[u], roomy[u], err_msg=f"uid={u}")
+
+    def test_greedy_default_ignores_seed(self):
+        cfg, params = _setup()
+        p = np.arange(4, 10, dtype=np.int32)
+        ref = _ref_rows(params, cfg, [p], [4])[0]
+        b = ContinuousBatcher(params, cfg, batch_size=1, max_len=32)
+        b.submit(Request(uid=0, prompt=p, max_new_tokens=4, seed=123))
+        np.testing.assert_array_equal(b.run()[0].output, ref)
+
+
+class TestSchedulerScan:
     @pytest.mark.slow
     def test_scanned_layer_cache_insert(self):
         """Regression: prefill-row insertion must handle scanned caches,
