@@ -28,13 +28,25 @@ Three sections:
      live tokens, but at this CPU toy scale the model matmuls dominate
      and tok/s lands near parity. The read-path scaling itself is
      isolated in ``kernel_bench.py`` (BENCH_paged_kernel.json).
+  4. ``prefill interleaving / TTFT`` — a long prompt arrives while another
+     request is decoding. With a one-shot-sized ``token_budget`` the whole
+     prompt lands in ONE tick (the old admit-then-decode shape): that tick
+     is the decode stall — the decoding row's inter-token latency spikes
+     to the full prefill time. A chunked budget bounds every mixed tick,
+     so the max tick time during admission (= the stall) drops while
+     time-to-first-token stays in the same ballpark (chunks and decode
+     share each forward). Reported per budget: max/median tick latency
+     over the admission window and the long request's TTFT.
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
 Scale with REPRO_BENCH_STEPS (default 200 -> max_new_tokens 32).
+``--smoke`` runs every section once at toy sizes with no timing loops —
+a CI crash-detector for the engine paths, not a benchmark.
 """
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 import jax
@@ -46,10 +58,11 @@ from repro.configs.paper_models import opt_tiny
 from repro.models import model_init
 from repro.serving import ContinuousBatcher, GenerateConfig, Request, generate
 
+SMOKE = "--smoke" in sys.argv
 VOCAB = 256
 PROMPT_LEN = 8
-MAX_NEW = max(int(os.environ.get("REPRO_BENCH_STEPS", "200")) // 6, 8)
-BATCHES = (1, 2, 4, 8)
+MAX_NEW = 8 if SMOKE else max(int(os.environ.get("REPRO_BENCH_STEPS", "200")) // 6, 8)
+BATCHES = (2,) if SMOKE else (1, 2, 4, 8)
 
 METHODS = [
     ("vanilla", None, {}),
@@ -159,13 +172,65 @@ def bench_paged_vs_dense(cfg, params, n_dense_slots: int = 2,
     return out
 
 
+def bench_prefill_interleave(cfg, params, long_len: int = 96,
+                             budgets=(None, 48, 16)) -> list:
+    """Decode-stall + time-to-first-token while a long prompt streams in.
+
+    Request A decodes steadily; a long request B is then submitted. For
+    each ``token_budget`` (None = one-shot-sized: the whole prompt in one
+    chunk, i.e. the old admit-then-decode tick shape) we record every tick's
+    wall time from B's submission until B's first generated token. Returns
+    rows of (budget_label, max_tick_ms, median_tick_ms, ttft_ms): the max
+    tick is the decode stall bound — the worst inter-token latency request
+    A observes while B prefills."""
+    max_len = long_len + MAX_NEW + 8
+    rng = np.random.default_rng(0)
+    long_prompt = rng.integers(4, VOCAB, size=long_len).astype(np.int32)
+    short_prompt = rng.integers(4, VOCAB, size=PROMPT_LEN).astype(np.int32)
+    rows = []
+    for budget in budgets:
+        tb = budget if budget is not None else max_len
+        label = "one-shot" if budget is None else str(budget)
+        # warm pass compiles every tick shape on the SAME batcher (the jit
+        # cache is per-instance), timed pass measures
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=max_len,
+                              token_budget=tb)
+        # pass 0 warms the jit cache; the rows report pass 1's ticks/ttft
+        # (the loop leaves the last pass's measurements bound)
+        for pass_idx in range(2):
+            uid_a, uid_b = 2 * pass_idx, 2 * pass_idx + 1
+            b.submit(Request(uid=uid_a, prompt=short_prompt.copy(),
+                             max_new_tokens=2 * MAX_NEW))
+            for _ in range(3):
+                b.step()                      # A reaches steady decode
+            b.submit(Request(uid=uid_b, prompt=long_prompt.copy(),
+                             max_new_tokens=MAX_NEW))
+            t0 = time.perf_counter()
+            ticks, ttft = [], None
+            while ttft is None:
+                ts = time.perf_counter()
+                b.step()
+                ticks.append(time.perf_counter() - ts)
+                slot_b = next((s for s in b.slots
+                               if s.req is not None and s.req.uid == uid_b),
+                              None)
+                done_b = any(r.uid == uid_b for r in b.done)
+                if (slot_b is not None and slot_b.generated) or done_b:
+                    ttft = time.perf_counter() - t0
+            b.run()
+        rows.append((label, 1e3 * max(ticks),
+                     1e3 * sorted(ticks)[len(ticks) // 2], 1e3 * ttft))
+    return rows
+
+
 def main() -> None:
-    print(f"decode throughput, max_new_tokens={MAX_NEW}, prompt={PROMPT_LEN}")
+    print(f"decode throughput, max_new_tokens={MAX_NEW}, prompt={PROMPT_LEN}"
+          + (" [--smoke]" if SMOKE else ""))
     print("method,batch,generate_tok_s,batcher_tok_s")
     for name, method, kwargs in METHODS:
         cfg, params = make(method, kwargs)
         for b in BATCHES:
-            g = bench_generate(cfg, params, b)
+            g = bench_generate(cfg, params, b, reps=1 if SMOKE else 3)
             s = bench_batcher(cfg, params, b)
             print(f"{name},{b},{g:.1f},{s:.1f}")
 
@@ -175,6 +240,14 @@ def main() -> None:
     cfg, params = make(None, {})
     for alloc, (conc, tok_s) in bench_paged_vs_dense(cfg, params).items():
         print(f"{alloc},{conc},{tok_s:.1f}")
+
+    print("\n# prefill interleaving: long prompt admitted mid-decode "
+          "(max tick = decode stall bound)")
+    print("token_budget,max_tick_ms,median_tick_ms,ttft_ms")
+    for label, mx, med, ttft in bench_prefill_interleave(
+            cfg, params, long_len=32 if SMOKE else 96,
+            budgets=(None, 16) if SMOKE else (None, 48, 16)):
+        print(f"{label},{mx:.2f},{med:.2f},{ttft:.2f}")
 
 
 if __name__ == "__main__":

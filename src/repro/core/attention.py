@@ -287,6 +287,7 @@ def paged_attention_gather(
     cfg: AttentionConfig,
     q_offset=0,
     gate_pi: Optional[Array] = None,
+    live_widths: Optional[Array] = None,
 ) -> Array:
     """Gather-based attention over a paged KV cache. Returns (B, Tq, Hq, Dh).
 
@@ -301,14 +302,33 @@ def paged_attention_gather(
     ``alpha``, gamma resolves from the gathered axis length W*block_size —
     callers slicing the table to a live prefix must pre-resolve gamma from
     the LOGICAL length (``paged_attention`` does).
-    """
+
+    ``live_widths`` ((B,) int32, optional): each row's OWN count of live
+    block-table entries. Entries at or beyond a row's count are treated as
+    unallocated — their pool gather is redirected to block 0 and the
+    gathered lanes are zeroed, so the per-row read is confined to the
+    row's live prefix instead of the batch max. Allocation is prefix-dense,
+    so those entries are ``-1`` in real schedules and masking them is
+    bitwise-neutral; the mask makes the row's valid work (and, with a
+    sliced table, its gather) track the row rather than the widest row in
+    the tick."""
     b, w = block_table.shape
     nb, bs = k_pool.shape[0], k_pool.shape[1]
     tq, tk = q.shape[1], w * bs
-    safe = jnp.clip(block_table, 0, nb - 1)
+    valid_entry = block_table >= 0                               # (B, W)
+    if live_widths is not None:
+        valid_entry &= jnp.arange(w)[None, :] < \
+            jnp.asarray(live_widths, jnp.int32)[:, None]
+    safe = jnp.where(valid_entry, jnp.clip(block_table, 0, nb - 1), 0)
     k = k_pool[safe].reshape(b, tk, *k_pool.shape[2:])
     v = v_pool[safe].reshape(b, tk, *v_pool.shape[2:])
-    valid = jnp.repeat(block_table >= 0, bs, axis=1)             # (B, Tk)
+    valid = jnp.repeat(valid_entry, bs, axis=1)                  # (B, Tk)
+    if live_widths is not None:
+        # dead lanes are already masked out of the softmax below; zeroing
+        # the gathered values too keeps every dead-lane flop an exact zero
+        zmask = valid[:, :, None, None]
+        k = jnp.where(zmask, k, jnp.zeros((), k.dtype))
+        v = jnp.where(zmask, v, jnp.zeros((), v.dtype))
     mask = make_attention_mask(tq, tk, cfg.causal, cfg.window, q_offset)
     mask = jnp.broadcast_to(mask, (b, tq, tk)) & valid[:, None, :]
     return dense_attention(q, k, v, cfg, mask=mask, gate_pi=gate_pi)
@@ -324,6 +344,7 @@ def paged_attention(
     gate_pi: Optional[Array] = None,
     *,
     live_width: Optional[int] = None,
+    live_widths: Optional[Array] = None,
     backend: str = "auto",
     interpret: Optional[bool] = None,
 ) -> Array:
@@ -357,6 +378,14 @@ def paged_attention(
     blocks are live (and to ``live_width`` itself) — positions beyond the
     live prefix are causally unreachable, so slicing is exact, not an
     approximation.
+
+    ``live_widths``: optional (B,) int32 vector of each row's OWN live
+    entry count, masking the gather path's per-row read at the row rather
+    than the tick max (see ``paged_attention_gather``; the shapes stay
+    static — ``live_width`` bounds them, ``live_widths`` confines the valid
+    work inside them). The kernel backend ignores it: its per-block masks
+    already skip unallocated entries, and a per-row ``pl.when`` early exit
+    is on-TPU tuning work (ROADMAP).
     """
     b, w_full = block_table.shape
     bs = k_pool.shape[1]
@@ -383,7 +412,8 @@ def paged_attention(
     if backend != "gather":
         raise ValueError(f"unknown paged-attention backend {backend!r}")
     return paged_attention_gather(q, k_pool, v_pool, block_table, cfg,
-                                  q_offset=q_offset, gate_pi=gate_pi)
+                                  q_offset=q_offset, gate_pi=gate_pi,
+                                  live_widths=live_widths)
 
 
 def attention(

@@ -186,6 +186,33 @@ def _row_select(active: Array, new, old):
     return jax.tree_util.tree_map(sel, new, old)
 
 
+def _token_mask(active: Optional[Array], b: int, t: int) -> Optional[Array]:
+    """Normalize the ``active`` argument to a per-token (B, T) bool mask.
+
+    ``active`` may be a per-row (B,) mask (every token of a row shares its
+    fate — the decode-tick contract) or already per-token (B, T) — the
+    chunked-prefill contract, where row b contributes ``counts[b] <= T``
+    real tokens and the tail of its block is padding whose cache writes must
+    be dropped."""
+    if active is None:
+        return None
+    act = jnp.asarray(active)
+    if act.ndim == 1:
+        act = act[:, None]
+    return jnp.broadcast_to(act.astype(jnp.bool_), (b, t))
+
+
+def _row_active(active: Optional[Array]) -> Optional[Array]:
+    """Per-row (B,) reduction of ``active`` for states without a positional
+    write index (recurrent h/conv/cell). A row participates if ANY of its
+    tokens is live; ragged (partially live) rows are not representable for
+    recurrent states — the scheduler feeds recurrent models uniform-length
+    steps (see ``serving.scheduler``)."""
+    if active is None or active.ndim == 1:
+        return active
+    return active.any(axis=1)
+
+
 # ==========================================================================
 # Block init / apply
 # ==========================================================================
@@ -250,6 +277,7 @@ def _attn_block_apply(
     ctx: QuantContext, name: str,
     active: Optional[Array] = None,
     paged_live_width: Optional[int] = None,
+    paged_live_widths: Optional[Array] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     """Returns (x_out, new_cache, attn_layer_output, moe_aux); the attention
     layer output is the tensor whose outliers the paper measures."""
@@ -284,10 +312,12 @@ def _attn_block_apply(
         is_ring = "pos_ids" in cache
         is_paged = "block_table" in cache
         per_row = jnp.ndim(pos) >= 1      # per-slot positions (decode engine)
+        act_tok = _token_mask(active, b, t)   # (B, T) or None
+        ring_read = None
         if is_paged:
             # Paged pool (num_blocks, block_size, Hkv, Dh): every write is
             # routed through block_table[row, pos // block_size] indirection.
-            # Unallocated targets (table entry -1) and inactive rows are
+            # Unallocated targets (table entry -1) and inactive tokens are
             # redirected out of bounds and dropped, the same masked-scatter
             # convention as the dense per-row path below.
             nb, bs = cache["k"].shape[0], cache["k"].shape[1]
@@ -295,8 +325,8 @@ def _attn_block_apply(
             tpos = jnp.broadcast_to(_positions(pos, t), (b, t))  # logical
             phys = jnp.take_along_axis(table, tpos // bs, axis=1,
                                        mode="fill", fill_value=-1)
-            if active is not None:
-                phys = jnp.where(active[:, None], phys, -1)
+            if act_tok is not None:
+                phys = jnp.where(act_tok, phys, -1)
             phys = jnp.where(phys < 0, nb, phys)    # out of bounds -> dropped
             k_cache = cache["k"].at[phys, tpos % bs].set(
                 k.astype(cache["k"].dtype), mode="drop")
@@ -305,13 +335,17 @@ def _attn_block_apply(
             new_cache = {"k": k_cache, "v": v_cache, "block_table": table}
             paged_table = table
         elif per_row:
-            # Masked per-row scatter: each row b writes its block at its own
-            # position pos[b]; inactive rows are redirected out of bounds and
-            # dropped — no write, no double-buffer restore needed.
+            # Masked per-token scatter: row b writes token j of its block at
+            # position pos[b] + j; padding tokens (act_tok False) and dead
+            # rows are redirected out of bounds and dropped — no write, no
+            # double-buffer restore needed. A chunk (t > 1) must satisfy
+            # t <= ring length for local_attn layers so its own writes do
+            # not collide inside the ring (the scheduler caps chunks at the
+            # window).
             tpos = _positions(pos, t)                                # (B, T)
             widx = tpos % cache_len if is_ring else tpos
-            if active is not None:
-                widx = jnp.where(active[:, None], widx, cache_len)
+            if act_tok is not None:
+                widx = jnp.where(act_tok, widx, cache_len)
             bidx = jnp.arange(b)[:, None]
             k_cache = cache["k"].at[bidx, widx].set(
                 k.astype(cache["k"].dtype), mode="drop")
@@ -321,9 +355,42 @@ def _attn_block_apply(
             if is_ring:
                 pos_ids = cache["pos_ids"].at[bidx, widx].set(tpos, mode="drop")
                 new_cache["pos_ids"] = pos_ids
-                kp = pos_ids[:, None, :]                             # (B, 1, L)
                 q_pos = tpos[:, :, None]                             # (B, T, 1)
-                explicit_mask = (kp >= 0) & (kp <= q_pos) & (kp > q_pos - cfg.window)
+                if t == 1:
+                    # decode: the single fresh token never evicts in-window
+                    # history, so attend over the updated ring directly
+                    kp = pos_ids[:, None, :]                         # (B, 1, L)
+                else:
+                    # chunked prefill: a multi-token ring write can evict
+                    # history that EARLIER queries of the same chunk still
+                    # need (slot (pos+j) % L holds position pos+j-L, inside
+                    # the window of queries j' < j). Read the PRE-write ring
+                    # plus the fresh chunk as separate KV entries instead:
+                    # the position-id mask picks exactly the in-window,
+                    # causal, live subset of both segments, and padding
+                    # tokens of the fresh segment are tagged -1.
+                    fpos = tpos if act_tok is None else \
+                        jnp.where(act_tok, tpos, -1)
+                    kp = jnp.concatenate([cache["pos_ids"], fpos],
+                                         axis=1)[:, None, :]   # (B, 1, L+T)
+                    ring_read = (
+                        jnp.concatenate(
+                            [cache["k"], k.astype(cache["k"].dtype)], axis=1),
+                        jnp.concatenate(
+                            [cache["v"], v.astype(cache["v"].dtype)], axis=1),
+                    )
+                    # the concat KV axis (L + T) varies with chunk size, but
+                    # alpha-resolved clipping must be invariant to how the
+                    # prompt is chunked: pin gamma to the ring length — the
+                    # axis every other ring path (decode t==1, one-shot
+                    # scalar prefill) resolves it from
+                    if not acfg.softmax.is_vanilla:
+                        acfg = dataclasses.replace(
+                            acfg, softmax=ClippedSoftmaxConfig(
+                                gamma=acfg.softmax.resolve_gamma(cache_len),
+                                zeta=acfg.softmax.zeta))
+                explicit_mask = (kp >= 0) & (kp <= q_pos) & \
+                    (kp > q_pos - cfg.window)
                 acfg = dataclasses.replace(acfg, causal=False, window=None)
         elif is_ring:
             # ring buffer holding the last `window` tokens (decode, t == 1)
@@ -347,7 +414,7 @@ def _attn_block_apply(
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
             new_cache = {"k": k_cache, "v": v_cache}
-        k_all, v_all = k_cache, v_cache
+        k_all, v_all = ring_read if ring_read is not None else (k_cache, v_cache)
         q_offset = pos
     else:
         new_cache = None
@@ -369,6 +436,7 @@ def _attn_block_apply(
         attn_out = paged_attention(q, k_all, v_all, paged_table, acfg,
                                    q_offset=q_offset, gate_pi=gate_pi,
                                    live_width=paged_live_width,
+                                   live_widths=paged_live_widths,
                                    backend=cfg.paged_backend)
     elif explicit_mask is not None:
         attn_out = dense_attention(q, k_all, v_all, acfg, mask=explicit_mask,
@@ -415,16 +483,18 @@ def _block_apply(
     rope, cache, pos, ctx: QuantContext, name: str,
     active: Optional[Array] = None,
     paged_live_width: Optional[int] = None,
+    paged_live_widths: Optional[Array] = None,
 ) -> Tuple[Array, Optional[dict], Array, dict]:
     if kind in ("attn", "local_attn"):
         return _attn_block_apply(p, x, cfg, kind, rope, cache, pos, ctx, name,
                                  active=active,
-                                 paged_live_width=paged_live_width)
+                                 paged_live_width=paged_live_width,
+                                 paged_live_widths=paged_live_widths)
     if kind == "griffin":
         h = norm_apply(cfg.norm, p["ln1"], x, ctx, name + "/ln1")
         y, new_state = griffin_block_apply(p["griffin"], h, cfg.rglru, cache, ctx, name + "/griffin")
         if active is not None and cache is not None:
-            new_state = _row_select(active, new_state, cache)
+            new_state = _row_select(_row_active(active), new_state, cache)
         x = x + y
         mix_out = x
         h2 = norm_apply(cfg.norm, p["ln2"], x, ctx, name + "/ln2")
@@ -435,7 +505,7 @@ def _block_apply(
         fn = mlstm_block_apply if kind == "mlstm" else slstm_block_apply
         y, new_state = fn(p["blk"], h, cfg.xlstm, cache, ctx, name + f"/{kind}")
         if active is not None and cache is not None:
-            new_state = _row_select(active, new_state, cache)
+            new_state = _row_select(_row_active(active), new_state, cache)
         x = x + y
         return x, new_state, x, _zero_aux()
     raise ValueError(kind)
@@ -603,6 +673,7 @@ def model_apply(
     active: Optional[Array] = None,
     collect_acts: bool = False,
     paged_live_width: Optional[int] = None,
+    paged_live_widths: Optional[Array] = None,
 ) -> Tuple[Array, Dict[str, Any]]:
     """Forward pass.
 
@@ -610,9 +681,15 @@ def model_apply(
     cache/pos: decode state; pass T=1 (or prefill chunk) with a cache.
     ``pos`` may be a shared scalar or a per-row (B,) vector (slot-pool
     decode); with a vector, cache writes scatter per row. ``active`` is an
-    optional (B,) bool mask: rows with ``active=False`` still compute (their
-    logits are garbage) but their cache/state writes are dropped — the
-    masked-write contract the continuous batcher relies on.
+    optional bool mask — per-row (B,) or per-token (B, T): masked entries
+    still compute (their logits are garbage) but their cache/state writes
+    are dropped — the masked-write contract the continuous batcher relies
+    on. A per-token mask is what lets one fused step mix decode rows
+    (1 live token) with prefill chunks (``counts[b]`` live tokens) of
+    unequal lengths: row b's padding tail is simply inactive. Recurrent
+    blocks (griffin/xlstm) reduce the mask per row (``any`` over tokens),
+    so ragged rows are only supported for attention-family caches — the
+    scheduler feeds recurrent models uniform-length steps.
     The cache may be dense (``init_cache``: per-row contiguous KV) or paged
     (``init_paged_cache``: global block pools + per-row block tables, writes
     routed through ``block_table[pos // block_size]``); the layout is
@@ -622,6 +699,8 @@ def model_apply(
     entries — allocation is prefix-dense, so the scheduler passes the
     bucketed max blocks-in-use per tick and the attention cost tracks live
     tokens instead of the table width (see ``paged_attention``).
+    ``paged_live_widths`` ((B,) int32, optional) additionally masks each
+    row's paged READ at its own block count rather than the tick max.
     Returns (logits (B,T,vocab) f32, aux) where aux may contain
     "attn_outputs" (stacked per-layer residual values) and "cache".
     """
@@ -644,7 +723,8 @@ def model_apply(
             c = None if gcache is None else gcache[f"b{i}"]
             x, nc, a, ba = _block_apply(gparams[f"b{i}"], x, cfg, kind, rope, c, pos,
                                         ctx, f"layer_{kind}{i}", active=active,
-                                        paged_live_width=paged_live_width)
+                                        paged_live_width=paged_live_width,
+                                        paged_live_widths=paged_live_widths)
             new_gcache[f"b{i}"] = nc
             gacts.append(a)
             gaux = {k: gaux[k] + ba[k] for k in gaux}
@@ -697,7 +777,8 @@ def model_apply(
             c = None if cache is None else cache["tail"][f"t{i}"]
             x, nc, a, ta = _block_apply(params["tail"][f"t{i}"], x, cfg, kind, rope, c,
                                         pos, ctx, f"tail_{kind}{i}", active=active,
-                                        paged_live_width=paged_live_width)
+                                        paged_live_width=paged_live_width,
+                                        paged_live_widths=paged_live_widths)
             aux["moe_aux"] = {k: aux.get("moe_aux", _zero_aux())[k] + ta[k]
                               for k in ta}
             tcache_new[f"t{i}"] = nc

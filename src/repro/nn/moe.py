@@ -230,17 +230,19 @@ def moe_apply(p: Params, x: Array, cfg: MoEConfig, ctx: QuantContext = NO_QUANT,
               ) -> Tuple[Array, Dict[str, Array]]:
     """x: (B, T, D) -> (y, aux_losses).
 
-    ``active``: optional (B,) bool decode-slot mask. Tokens of inactive
-    rows are masked out of the router outputs AND the dispatch capacity
-    accounting, so a dead slot row cannot displace live rows' tokens from
-    expert buffers (its own output is garbage either way — the serving
-    engine drops dead rows' state writes)."""
+    ``active``: optional bool decode-slot mask, per-row (B,) or per-token
+    (B, T) — the latter is the chunked-prefill tick, where a row's padding
+    tail is dead. Dead tokens are masked out of the router outputs AND the
+    dispatch capacity accounting, so a dead token cannot displace live
+    tokens from expert buffers (its own output is garbage either way — the
+    serving engine drops dead tokens' state writes)."""
     b, t, d = x.shape
     x2d = ctx.act(name + "/in", x.reshape(b * t, d))
     top_p, top_i, aux = _router(p, x2d, cfg, ctx, name)
     token_mask = None
     if active is not None:
-        token_mask = jnp.repeat(active.astype(jnp.bool_), t)
+        token_mask = active.reshape(b * t).astype(jnp.bool_) \
+            if active.ndim == 2 else jnp.repeat(active.astype(jnp.bool_), t)
         top_p = top_p * token_mask[:, None].astype(top_p.dtype)
     if cfg.exec_mode == "dense":
         y = _moe_dense(p, x2d, top_p, top_i, cfg)

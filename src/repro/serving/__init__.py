@@ -6,14 +6,16 @@ from repro.serving.decode import (
     sample_logits,
     sample_rows,
     sample_token_at,
+    step_rows,
 )
 
 __all__ = ["GenerateConfig", "decode_one", "generate", "prefill",
-           "sample_logits", "sample_rows", "sample_token_at"]
+           "sample_logits", "sample_rows", "sample_token_at", "step_rows"]
 from repro.serving.scheduler import (  # noqa: E402
     BlockAllocator,
     ContinuousBatcher,
+    PrefillState,
     Request,
 )
 
-__all__ += ["BlockAllocator", "ContinuousBatcher", "Request"]
+__all__ += ["BlockAllocator", "ContinuousBatcher", "PrefillState", "Request"]

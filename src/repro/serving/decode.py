@@ -112,6 +112,35 @@ def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos,
     return logits[:, -1, :], aux["cache"]
 
 
+def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
+              counts: Array, paged_live_width: Optional[int] = None,
+              paged_live_widths: Optional[Array] = None):
+    """Variable-Tq fused step: the token-budget scheduler's mixed
+    prefill/decode forward.
+
+    ``tokens`` (B, T) carries every row's contribution for this tick,
+    left-aligned: a decode row holds 1 token, a prefill row holds a chunk
+    of its prompt, an idle row holds padding. ``pos`` (B,) is each row's
+    absolute start position and ``counts`` (B,) its number of REAL tokens
+    (0 = idle); the derived per-token active mask drops every padding
+    token's cache write (see ``model_apply``). Returns
+    (last_logits (B, vocab), cache) where ``last_logits[b]`` is the logits
+    at row b's LAST real token — the only position whose prediction the
+    scheduler may consume (chunk-aware sampling: a non-final prefill chunk
+    discards it, the final chunk samples the request's first token from
+    it, a decode row samples its next token)."""
+    b, t = tokens.shape
+    counts = jnp.asarray(counts, jnp.int32)
+    active = jnp.arange(t, dtype=jnp.int32)[None, :] < counts[:, None]
+    logits, aux = model_apply(params, cfg, {"tokens": tokens},
+                              cache=cache, pos=pos, active=active,
+                              paged_live_width=paged_live_width,
+                              paged_live_widths=paged_live_widths)
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(counts - 1, 0)[:, None, None], axis=1)[:, 0, :]
+    return last, aux["cache"]
+
+
 @partial(jax.jit, static_argnums=(1, 4))
 def _decode_loop(params, cfg: ModelConfig, cache, last_logits,
                  gen: GenerateConfig, pos, key):

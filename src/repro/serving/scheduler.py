@@ -1,16 +1,33 @@
-"""Continuous-batching request scheduler over a fused per-slot decode step.
+"""Token-budget continuous-batching scheduler over one fused mixed step.
 
-Real serving stacks (vLLM/JetStream-style) keep the decode batch full by
-slotting new requests into finished sequences' cache rows instead of
-waiting for the whole batch to drain. This is the jax-native equivalent:
+Real serving stacks (vLLM/JetStream/Sarathi-style) do not run prefill and
+decode as separate phases: every engine tick assembles ONE forward pass of
+up to ``token_budget`` tokens in which decoding rows contribute 1 token
+each and admitted-but-unfinished prompts contribute a prefill *chunk* —
+several chunks from different requests batched together, interleaved with
+the decode rows. This module is the jax-native equivalent:
 
-  * a fixed-shape slot pool (batch B rows) holds the decode state;
-  * every tick decodes EVERY active slot in one fused jitted step, each row
-    at its own position (per-row scatter cache writes — no lockstep
-    cohorts, no double-buffer restore of idle rows: inactive rows' writes
-    are masked out inside the kernel);
-  * finished slots (EOS or length budget) are refilled from the queue by
-    running a per-slot prefill into the shared cache.
+  * a fixed-shape slot pool (batch B rows) holds all request state;
+  * each tick carves chunks (``PrefillState`` cursors + budget accounting),
+    left-aligns every row's contribution into a ``(B, T)`` token block
+    (T = the bucketed max contribution), and runs one jitted
+    ``step_rows`` forward: per-row ``pos`` vectors place each row at its
+    own absolute position, a per-token ``active`` mask drops the padding
+    tail's cache writes, and only each row's LAST real token's logits are
+    consumed (chunk-aware sampling — a non-final chunk discards them, a
+    final chunk samples the request's first token, a decode row its next);
+  * there is no separate admission prefill: admission just binds a slot,
+    resets its row state, and lets the tick stream the prompt in — so
+    decode rows keep advancing while prompts prefill, and a prompt longer
+    than a ``local_attn`` window is admissible (chunks are capped at the
+    window; the ring read path handles multi-token chunks — the seed's
+    one-shot ring prefill limit is gone).
+
+Admission is (priority, arrival)-ordered — ``Request.priority`` (higher
+first), FIFO among equals, so equal-priority traffic cannot starve — and
+gated by a free-block *watermark* in paged mode (``admit_watermark``:
+admit only while ``free_blocks >= watermark``), replacing the seed's bare
+FIFO head-of-line.
 
 Two KV-cache backends, selected by ``paged``:
 
@@ -19,36 +36,42 @@ Two KV-cache backends, selected by ``paged``:
     B * max_len regardless of how long requests actually are.
   * paged — a global block pool of ``num_blocks`` blocks of ``block_size``
     tokens per layer plus per-row block tables (``init_paged_cache``).
-    Admission is gated by free *blocks*, memory scales with live tokens, and
-    ``max_len`` is only a per-row logical cap (it may exceed the dense
-    per-slot budget the same total memory would buy). ``BlockAllocator`` is
-    the host-side free list; blocks are allocated at admission (prompt + the
-    first decode write), grown one block at a time as rows decode across a
-    block boundary, and freed at retirement. When the pool is exhausted and
-    NO row can advance, the most recently admitted stalled row is preempted
-    vLLM-style: its blocks are freed and the request is re-queued at the
-    front for recompute-resume (re-prefill of prompt + tokens generated so
-    far — greedy decode, and position-keyed sampling where the token at
-    position p is drawn with ``fold_in(request_seed, p)``, make the resumed
-    continuation exact).
+    ``BlockAllocator`` is the host-side free list; blocks are allocated as
+    chunks and decode writes land in them (a chunk shrinks to the blocks it
+    can get — partial prefill progress is fine) and freed at retirement.
+    When the pool is exhausted and NO row can advance, the most recently
+    admitted stalled row is preempted vLLM-style: its blocks are freed and
+    the request is re-queued (keeping its original arrival rank) for
+    recompute-resume. The resume is just a longer prompt re-entering the
+    SAME chunked-prefill path — greedy decode, and position-keyed sampling
+    where the token at position p is drawn with ``fold_in(request_seed,
+    p)``, make the resumed continuation exact, and chunking makes rows past
+    a ``local_attn`` window preemptable too (the seed had to refuse them).
 
 The decode tick samples with ``GenerateConfig`` parity: pass ``gen=`` for
 temperature/top-k (greedy by default) and ``Request.seed`` for per-request
 reproducibility. In paged mode each tick passes a bucketed *live width* —
 the max blocks any row holds, rounded to a power of two — as a static
-argument, so the paged attention read (Pallas kernel on TPU, XLA gather
-elsewhere; see ``core.attention.paged_attention``) only visits the
-allocated block-table prefix and the tick cost tracks live tokens, not the
-table width.
+argument plus a per-row live-width vector, so the paged attention read
+(Pallas kernel on TPU, XLA gather elsewhere; see
+``core.attention.paged_attention``) only visits the allocated block-table
+prefix and each row's read is masked at its own block count.
 
-The per-row ``pos`` vector / masked-scatter contract the decode step relies
-on is documented in ``repro.models.transformer.model_apply`` and
+Models with recurrent blocks (griffin/xlstm) cannot express ragged rows
+(a recurrence has no per-token write index to mask), so for those configs
+the engine splits each tick into a decode sub-step and a uniform-length
+prefill sub-step instead of one mixed ragged step — still chunked, still
+non-stalling, just not interleaved within a single forward.
+
+The per-row ``pos`` vector / masked per-token scatter contract the step
+relies on is documented in ``repro.models.transformer.model_apply`` and
 ``repro.core.attention``; the architecture narrative lives in
 ``docs/serving.md``.
 
 Slot and block bookkeeping is host-side python (cheap, O(B) per step); all
-tensor work stays jitted with static shapes — the pattern that scales to the
-pod-sharded cache (slots = batch rows, already sharded over dp).
+tensor work stays jitted with static shapes — (T, live_width) pairs are
+bucketed to powers of two so at most O(log(budget) * log(W)) step
+specializations exist.
 """
 from __future__ import annotations
 
@@ -63,13 +86,13 @@ from repro.models.transformer import (
     ModelConfig,
     init_cache,
     init_paged_cache,
-    model_apply,
 )
-from repro.serving.decode import GenerateConfig, sample_rows, sample_token_at
+from repro.serving.decode import GenerateConfig, sample_rows, step_rows
 
 Array = jax.Array
 
 _TABLE_KEY = jax.tree_util.DictKey("block_table")
+_RECURRENT_KINDS = ("griffin", "mlstm", "slstm")
 
 
 @dataclasses.dataclass
@@ -77,6 +100,9 @@ class Request:
     uid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int = 32
+    # admission priority: HIGHER is served first; FIFO (arrival order)
+    # among equal priorities, so equal-priority traffic cannot starve
+    priority: int = 0
     # per-request sampling seed (used when the batcher's GenerateConfig has
     # temperature > 0); None derives a deterministic default from uid
     seed: Optional[int] = None
@@ -84,24 +110,55 @@ class Request:
     output: Optional[np.ndarray] = None
     # internal: tokens generated before a preemption (recompute-resume state)
     resume_generated: Optional[List[int]] = None
+    # internal: submission sequence number (admission tie-break; a preempted
+    # request keeps its original arrival, so re-queueing cannot demote it
+    # behind later arrivals of the same priority)
+    arrival: Optional[int] = None
+
+
+@dataclasses.dataclass
+class PrefillState:
+    """Chunked-prefill cursor of one admitted request.
+
+    ``feed`` is everything that must stream through the model before the
+    request can decode: the prompt, plus — for a recompute-resume after
+    preemption — all but the last of its previously generated tokens (the
+    last one becomes the first decode input again). ``done`` tokens of it
+    are already written to the cache; each tick the scheduler carves the
+    next chunk ``feed[done:done+c]`` against the token budget."""
+    feed: np.ndarray                 # (T,) int32
+    done: int = 0
+    # recompute-resume: the previously generated tokens, restored verbatim
+    # when the prefill completes (the final chunk's sample is discarded —
+    # position-keyed sampling would reproduce it exactly anyway)
+    resume: Optional[List[int]] = None
+
+    @property
+    def remaining(self) -> int:
+        return len(self.feed) - self.done
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    pos: int = 0                     # next cache position
+    pos: int = 0                     # next cache position (= tokens written)
     generated: List[int] = dataclasses.field(default_factory=list)
     blocks: List[int] = dataclasses.field(default_factory=list)  # paged only
     order: int = 0                   # admission sequence number
     key: Optional[np.ndarray] = None  # (2,) uint32 request PRNG key
+    prefill: Optional[PrefillState] = None   # None once fully prefilled
 
 
 class BlockAllocator:
     """Host-side free list over the global KV block pool.
 
     Physical block ids are plain ints in [0, num_blocks); the pool tensors
-    live on device, only the *mapping* is host state. ``alloc`` is
-    all-or-nothing so a request never holds a partial reservation."""
+    live on device, only the *mapping* is host state. A single ``alloc``
+    call is all-or-nothing, but callers may take less than they ultimately
+    want: ``_grow_blocks`` claims ``min(need, available)`` so a prefill
+    chunk shrinks to partial progress instead of stalling — a row CAN hold
+    blocks for writes it has not made yet (they are used on a later tick,
+    or returned wholesale at preemption/retirement)."""
 
     def __init__(self, num_blocks: int) -> None:
         self.num_blocks = num_blocks
@@ -138,19 +195,29 @@ def _with_tables(cache, table: Array):
     return jax.tree_util.tree_map_with_path(set_leaf, cache)
 
 
+def _bucket(n: int) -> int:
+    """Round up to a power of two (bounds jit specializations)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 class ContinuousBatcher:
-    """Slot-pool scheduler over a shared static KV cache (dense or paged).
+    """Token-budget slot-pool scheduler over a shared static KV cache
+    (dense or paged).
 
     Device state per slot row: KV cache (dense row or block-table view into
-    the pool), next position and last sampled token; one jitted decode
-    advances all active rows per tick regardless of their (generally
-    different) positions."""
+    the pool), next position and last sampled token; one jitted mixed step
+    advances every runnable row per tick — decode rows by one token,
+    prefilling rows by a prompt chunk — regardless of their (generally
+    different) positions and phase."""
 
     def __init__(self, params, cfg: ModelConfig, batch_size: int,
                  max_len: int, eos_id: Optional[int] = None,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 gen: Optional[GenerateConfig] = None) -> None:
+                 gen: Optional[GenerateConfig] = None,
+                 token_budget: int = 256,
+                 prefill_chunk: Optional[int] = None,
+                 admit_watermark: int = 0) -> None:
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -161,10 +228,18 @@ class ContinuousBatcher:
         self._gen = gen if gen is not None else GenerateConfig()
         self.eos_id = eos_id if eos_id is not None else self._gen.eos_id
         self.paged = paged
+        if token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        self.token_budget = token_budget
+        self.admit_watermark = admit_watermark
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self._order = 0
+        self._arrival = 0
+        # counts vector of the most recent sub-step (observability + tests:
+        # a mixed tick shows >= 2 entries > 1 next to entries == 1)
+        self.last_counts: Optional[np.ndarray] = None
         if paged:
             self.block_size = block_size
             n_entries = -(-max_len // block_size)
@@ -181,20 +256,26 @@ class ContinuousBatcher:
         else:
             make_cache = lambda b: init_cache(cfg, b, max_len)  # noqa: E731
         self.cache = make_cache(batch_size)
-        # admission prefills run against a batch-1 view; the fresh zero
-        # template is immutable, so one copy serves every admission. In
-        # paged mode only its batch-led leaves (ring/recurrent rows, table)
-        # are ever read — build it with a 1-block pool so the template does
-        # not duplicate the real pool's device memory
+        # fresh batch-1 state template: admission resets the slot's
+        # batch-led rows (ring pos_ids, recurrent states, dense KV) from it
+        # so the previous occupant cannot leak into the new request's
+        # prefill. In paged mode only its batch-led leaves are ever read —
+        # build it with a 1-block pool so the template does not duplicate
+        # the real pool's device memory
         self._row_template = init_paged_cache(cfg, 1, max_len, 1, block_size) \
             if paged else make_cache(1)
-        # one-shot ring prefill cannot exceed the local_attn window (see
-        # ROADMAP: chunked ring prefill); recompute-preemption must not
-        # create resume prompts that would wrap the ring
-        has_ring = any(k == "local_attn"
-                       for k in cfg.pattern + cfg.tail_pattern)
-        self._ring_limit = min(max_len, cfg.window) \
-            if (paged and has_ring and cfg.window) else None
+        kinds = cfg.pattern + cfg.tail_pattern
+        # recurrent states have no per-token write index to mask, so ragged
+        # mixed steps are not expressible — such configs run split
+        # decode/uniform-prefill sub-steps instead (see module docstring)
+        self._uniform = any(k in _RECURRENT_KINDS for k in kinds)
+        # a prefill chunk on a local_attn layer must fit the ring, and its
+        # own writes must not collide inside it
+        ring_cap = min(max_len, cfg.window) \
+            if (any(k == "local_attn" for k in kinds) and cfg.window) \
+            else token_budget
+        self._chunk_cap = min(prefill_chunk or token_budget, token_budget,
+                              ring_cap)
         # which leaves are batch-free (the paged global pools, shared by all
         # rows) vs batch-led (dense/ring KV, recurrent states, block
         # tables): exactly the leaves whose shape ignores the batch argument
@@ -205,31 +286,36 @@ class ContinuousBatcher:
 
         gen_cfg = self._gen
 
-        def _decode(params, cache, tokens, pos, active, keys, live_width):
-            # one fused step: every row decodes at its own position; writes
-            # of inactive rows are dropped inside model_apply (masked
-            # per-row scatter), so idle cache rows are never clobbered.
-            # ``live_width`` (static) bounds the paged attention read to the
-            # allocated block-table prefix; ``keys`` are per-request PRNG
-            # keys — the sampled token at position p is fold_in(key, p), so
-            # recompute-resume replays identical samples (see decode.py).
-            logits, aux = model_apply(params, cfg, {"tokens": tokens},
-                                      cache=cache, pos=pos, active=active,
-                                      paged_live_width=live_width)
-            next_tok = sample_rows(logits[:, -1, :], gen_cfg, keys, pos + 1)
-            return next_tok, aux["cache"]
+        def _mixed_step(params, cache, tokens, pos, counts, keys,
+                        live_width, live_widths):
+            # one fused step: every runnable row advances at its own
+            # position — decode rows by 1 token, prefill rows by a chunk;
+            # padding tokens' writes are dropped inside model_apply (masked
+            # per-token scatter). ``live_width`` (static) bounds the paged
+            # attention read to the allocated block-table prefix and
+            # ``live_widths`` masks each row's read at its own block count;
+            # ``keys`` are per-request PRNG keys — the sampled token at
+            # position p is fold_in(key, p), so recompute-resume replays
+            # identical samples (see decode.py).
+            last, new_cache = step_rows(
+                params, cfg, cache, tokens, pos, counts,
+                paged_live_width=live_width, paged_live_widths=live_widths)
+            nxt = sample_rows(last, gen_cfg, keys, pos + counts)
+            return nxt, new_cache
 
-        self._decode = jax.jit(_decode, static_argnums=(6,))
-        self._first_token = jax.jit(
-            lambda logits, key, t: sample_token_at(logits, gen_cfg, key, t))
+        self._step_fn = jax.jit(_mixed_step, static_argnums=(6,))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         """Enqueue a request, rejecting impossible ones up front — a lazy
-        admit-time failure would wedge the FIFO queue head and strand every
-        in-flight and queued request behind it. (Preemption re-queues
-        bypass this: resume lengths are bounded by construction.)"""
+        admit-time failure would wedge the queue head and strand every
+        queued request behind it. (Preemption re-queues bypass this:
+        resume lengths are bounded by construction.)"""
         t = len(req.prompt)
+        if t == 0:
+            raise ValueError(
+                f"request uid={req.uid}: empty prompt (there is no logits "
+                f"position to sample a first token from)")
         if t > self.L - 1:
             raise ValueError(
                 f"request uid={req.uid}: {t} prompt tokens do not fit a "
@@ -239,6 +325,9 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request uid={req.uid} needs {self._blocks_for(t + 1)} "
                 f"blocks; the pool only has {self.num_blocks}")
+        if req.arrival is None:
+            req.arrival = self._arrival
+            self._arrival += 1
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
@@ -247,154 +336,157 @@ class ContinuousBatcher:
     def _blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
-    def _row_cache(self, i: int):
-        """Batch-1 admission cache for slot ``i``. Dense mode: the fresh
-        zero template (batch-1 caches are independent of the pool). Paged
-        mode: paged entries reference the LIVE global pools plus this row's
-        host block table, while batch-led entries (local_attn rings,
-        recurrent states) still start from the fresh template — a slice of
-        the shared cache would leak the previous occupant's ring pos_ids /
-        recurrent state into the new request's prefill."""
-        if not self.paged:
-            return self._row_template
-        table = jnp.asarray(self.tables[i:i + 1])
-
-        def pick(path, batch_free, fresh_leaf, live_leaf):
-            if path and path[-1] == _TABLE_KEY:
-                return _table_leaf(fresh_leaf, table)
-            return live_leaf if batch_free else fresh_leaf
-
-        return jax.tree_util.tree_map_with_path(
-            pick, self._batch_free, self._row_template, self.cache)
-
-    def _merge_row(self, new_cache, i: int) -> None:
-        """Fold a batch-1 admission prefill back into the shared cache:
-        batch-led leaves are inserted at row ``i``; paged pool leaves are
-        adopted whole (the prefill scattered into this row's blocks in
-        place — dense mode has no such leaves to adopt); block tables stay
-        host-owned."""
-        def pick(path, batch_free, live_leaf, new_leaf):
-            if path and path[-1] == _TABLE_KEY:
+    def _reset_row(self, i: int) -> None:
+        """Reset slot ``i``'s batch-led device state (dense/ring KV rows,
+        ring pos_ids, recurrent h/conv/cell) to the fresh template before a
+        new occupant starts prefilling: stale ring position ids or
+        recurrent state from the previous occupant would otherwise leak
+        into the new request. Paged pool leaves are shared by all rows and
+        left alone (newly allocated blocks are fully overwritten before any
+        causally reachable read), and block tables stay host-owned."""
+        def pick(path, batch_free, live_leaf, tmpl_leaf):
+            if (path and path[-1] == _TABLE_KEY) or batch_free:
                 return live_leaf
-            if batch_free:
-                return new_leaf if self.paged else live_leaf
             # scanned caches stack layer groups in front: (G, B, ...)
             ax = 1 if path and path[0] == jax.tree_util.DictKey("groups") \
                 else 0
             dst = (slice(None),) * ax + (i,)
             src = (slice(None),) * ax + (0,)
-            return live_leaf.at[dst].set(new_leaf[src])
+            return live_leaf.at[dst].set(tmpl_leaf[src])
 
         self.cache = jax.tree_util.tree_map_with_path(
-            pick, self._batch_free, self.cache, new_cache)
+            pick, self._batch_free, self.cache, self._row_template)
 
     def _admit(self) -> None:
-        """Prefill queued requests into free slots, FIFO. Dense mode gates on
-        free slots only; paged mode additionally requires blocks for the
-        prompt plus the first decode write (head-of-line: if the front
-        request doesn't fit, admission waits rather than skipping it).
-        A preempted request re-prefills prompt + generated-so-far and
-        resumes its token list."""
+        """Bind queued requests to free slots in (priority desc, arrival
+        asc) order. Admission does NOT prefill — it resets the slot row and
+        hands the prompt to the chunked tick — so its only gates are a free
+        slot and, in paged mode, the free-block watermark (admission stops
+        while ``free_blocks < admit_watermark``, keeping headroom for the
+        rows already decoding instead of thrashing the pool)."""
         for i in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue[0]
+            if self.paged and self.allocator.available < self.admit_watermark:
+                break
+            j = min(range(len(self.queue)),
+                    key=lambda j: (-self.queue[j].priority,
+                                   self.queue[j].arrival))
+            req = self.queue.pop(j)
             resume = req.resume_generated
-            toks = req.prompt if not resume else \
-                np.concatenate([req.prompt,
-                                np.asarray(resume[:-1], np.int32)])
-            t = len(toks)
-            if self.paged:
-                blocks = self.allocator.alloc(self._blocks_for(t + 1))
-                if blocks is None:
-                    break                       # wait for blocks to free up
-                self.queue.pop(0)
-                self.tables[i, :len(blocks)] = blocks
-                self._tables_dirty = True
+            req.resume_generated = None
+            if resume:
+                feed = np.concatenate(
+                    [np.asarray(req.prompt, np.int32),
+                     np.asarray(resume[:-1], np.int32)])
             else:
-                blocks = []
-                self.queue.pop(0)
-            logits, aux = model_apply(
-                self.params, self.cfg,
-                {"tokens": jnp.asarray(toks)[None, :]},
-                cache=self._row_cache(i), pos=0)
-            # paged: the prefill scattered into this row's pool blocks in
-            # place; batch-led state (dense/ring KV, recurrent) comes back
-            # batch-1 and is inserted at row i
-            self._merge_row(aux["cache"], i)
+                feed = np.asarray(req.prompt, np.int32)
+            self._reset_row(i)
             key = np.asarray(jax.random.PRNGKey(
                 req.seed if req.seed is not None else req.uid))
-            if resume:
-                gen = list(resume)
-                req.resume_generated = None
-            else:
-                # the first generated token sits at position t: same
-                # position-keyed rule as the tick, so admission and decode
-                # draw from one coherent per-request stream
-                gen = [int(self._first_token(logits[0, -1],
-                                             jnp.asarray(key), t))]
-            self.slots[i] = _Slot(req=req, pos=t, generated=gen,
-                                  blocks=blocks, order=self._order, key=key)
+            self.slots[i] = _Slot(
+                req=req, pos=0, generated=[], blocks=[], order=self._order,
+                key=key,
+                prefill=PrefillState(feed=feed,
+                                     resume=list(resume) if resume else None))
             self._order += 1
 
     def _preempt(self, i: int) -> None:
         """Evict slot ``i`` for recompute: free its blocks, stash its
-        generated tokens on the request, and put it at the queue front."""
+        generated tokens on the request, and re-queue it (the original
+        arrival rank keeps it ahead of later equal-priority arrivals)."""
         s = self.slots[i]
-        s.req.resume_generated = list(s.generated)
+        if s.prefill is not None and s.prefill.resume:
+            s.req.resume_generated = list(s.prefill.resume)
+        else:
+            s.req.resume_generated = list(s.generated)
         self.allocator.free(s.blocks)
         self.tables[i] = -1
         self._tables_dirty = True
-        self.queue.insert(0, s.req)
+        self.queue.append(s.req)
         self.slots[i] = _Slot()
 
-    def _ensure_blocks(self) -> List[int]:
-        """Paged decode-tick allocation: give every active row the block its
-        next write position lands in. Rows that cannot get one simply skip
-        this tick (their state is untouched, so retrying later is free). If
-        the pool is exhausted and *no* row can advance, preempt the most
-        recently admitted stalled row and retry; a single stalled row holding
-        the whole pool means the pool is simply too small for the request.
-        Returns the slot indices that can decode this tick."""
+    # ------------------------------------------------------------------
+    def _grow_blocks(self, i: int, n_tokens: int) -> int:
+        """Paged: try to grow slot ``i``'s block list to cover its next
+        ``n_tokens`` writes; allocates as many of the missing blocks as the
+        pool can give. Returns how many of the ``n_tokens`` writes are now
+        covered (possibly 0)."""
+        s = self.slots[i]
+        need = self._blocks_for(s.pos + n_tokens) - len(s.blocks)
+        if need > 0:
+            got = self.allocator.alloc(min(need, self.allocator.available))
+            if got:
+                self.tables[i, len(s.blocks):len(s.blocks) + len(got)] = got
+                s.blocks.extend(got)
+                self._tables_dirty = True
+        return max(0, min(n_tokens, len(s.blocks) * self.block_size - s.pos))
+
+    def _plan(self, want_decode: bool, want_prefill: bool,
+              allow_preempt: bool) -> np.ndarray:
+        """Carve this sub-step's per-row token counts against the budget,
+        allocating paged blocks as needed. Decode rows come first (1 token
+        each — inter-token latency is the knob the budget must never
+        starve), then prefill chunks in admission order. If the pool is
+        exhausted and NO row can advance, preempt the most recently
+        admitted stalled row and retry; a single stalled row holding the
+        whole pool means the pool is simply too small for the request."""
         while True:
-            ready, stalled = [], []
-            for i, s in enumerate(self.slots):
-                if s.req is None:
-                    continue
-                need = s.pos // self.block_size + 1 - len(s.blocks)
-                if need > 0:
-                    got = self.allocator.alloc(need)
-                    if got is None:
+            counts = np.zeros(self.B, np.int32)
+            stalled: List[int] = []
+            budget = self.token_budget
+            if want_decode:
+                for i, s in enumerate(self.slots):
+                    if s.req is None or s.prefill is not None:
+                        continue
+                    if self.paged and self._grow_blocks(i, 1) < 1:
                         stalled.append(i)
                         continue
-                    self.tables[i, len(s.blocks):len(s.blocks) + need] = got
-                    s.blocks.extend(got)
-                    self._tables_dirty = True
-                ready.append(i)
-            if ready or not stalled:
-                return ready
-            if len(stalled) == 1:
+                    counts[i] = 1
+                    budget -= 1
+            if want_prefill:
+                pre = sorted(
+                    (i for i, s in enumerate(self.slots)
+                     if s.req is not None and s.prefill is not None),
+                    key=lambda i: self.slots[i].order)
+                uniform_c = None
+                if self._uniform and pre:
+                    uniform_c = min(min(self.slots[i].prefill.remaining
+                                        for i in pre),
+                                    self._chunk_cap, max(budget, 0))
+                for i in pre:
+                    if budget <= 0:
+                        break
+                    s = self.slots[i]
+                    if uniform_c is not None:
+                        if uniform_c > budget:
+                            break
+                        c = uniform_c
+                    else:
+                        c = min(s.prefill.remaining, self._chunk_cap, budget)
+                    if c > 0 and self.paged:
+                        c = self._grow_blocks(i, c)
+                        if self._uniform and 0 < c < uniform_c:
+                            # a short chunk would make the step ragged;
+                            # recurrent rows sit this tick out instead
+                            c = 0
+                    if c <= 0:
+                        stalled.append(i)
+                        continue
+                    counts[i] = c
+                    budget -= c
+            if counts.any() or not stalled:
+                return counts
+            if not allow_preempt:
+                return counts
+            occupied = sum(s.req is not None for s in self.slots)
+            if occupied == 1:
                 s = self.slots[stalled[0]]
                 raise RuntimeError(
                     f"block pool too small: request uid={s.req.uid} holds "
                     f"{len(s.blocks)}/{self.num_blocks} blocks and still "
                     f"needs more; increase num_blocks")
-            # a preempted row resumes via a one-shot re-prefill of
-            # prompt + generated-so-far (= pos tokens); past the local_attn
-            # window that prefill would wrap the ring and silently corrupt
-            # the continuation, so such rows are not preemptable
-            preemptable = [i for i in stalled
-                           if self._ring_limit is None
-                           or self.slots[i].pos <= self._ring_limit]
-            if not preemptable:
-                raise RuntimeError(
-                    f"block pool exhausted and every stalled row is past "
-                    f"the local_attn window ({self._ring_limit} tokens), so "
-                    f"none can be preempted for recompute (one-shot ring "
-                    f"prefill limit — see ROADMAP: chunked ring prefill); "
-                    f"increase num_blocks")
-            self._preempt(max(preemptable,
-                              key=lambda i: self.slots[i].order))
+            self._preempt(max(stalled, key=lambda i: self.slots[i].order))
 
     def _live_width(self) -> Optional[int]:
         """Static block-table read width for this tick: the max blocks any
@@ -407,12 +499,11 @@ class ContinuousBatcher:
             return None
         held = max((len(s.blocks) for s in self.slots if s.req is not None),
                    default=1)
-        lw = 1 if held <= 1 else 1 << (held - 1).bit_length()
-        return min(lw, self.tables.shape[1])
+        return min(_bucket(held), self.tables.shape[1])
 
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
-            if s.req is None:
+            if s.req is None or s.prefill is not None:
                 continue
             out_len = len(s.generated)
             hit_eos = self.eos_id is not None and s.generated and \
@@ -426,47 +517,88 @@ class ContinuousBatcher:
                     self._tables_dirty = True
                 self.slots[i] = _Slot()
 
-    def step(self) -> int:
-        """One scheduler tick: admit, decode one token for EVERY active
-        slot that has cache room, retire. Returns number of decoded slots."""
-        # a prefill's first token may already satisfy EOS or the budget;
-        # retire-and-refill until the slot set is stable before decoding
-        while True:
-            self._admit()
-            n_done = len(self.done)
-            self._retire()
-            if len(self.done) == n_done or not self.queue:
-                break
-        if self.paged:
-            run_idx = self._ensure_blocks()
-        else:
-            run_idx = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not run_idx:
+    def _substep(self, want_decode: bool = True, want_prefill: bool = True,
+                 allow_preempt: bool = True) -> int:
+        """Plan, assemble and run ONE fused forward; apply its results to
+        the slots. Returns the number of rows that advanced."""
+        counts = self._plan(want_decode, want_prefill, allow_preempt)
+        run = np.flatnonzero(counts)
+        if run.size == 0:
             return 0
-        # per-row decode state, derived from the slots each tick (O(B))
-        last_tok = np.asarray([s.generated[-1] if s.generated else 0
-                               for s in self.slots], np.int32)
-        pos = np.asarray([s.pos for s in self.slots], np.int32)
-        active = np.zeros((self.B,), bool)
-        active[run_idx] = True
+        self.last_counts = counts.copy()
+        # recurrent rows would feed any padding tail into their recurrence
+        # (no per-token write index to mask), so uniform mode uses the
+        # exact chunk length — one compile per distinct prompt-chunk size,
+        # the same specialization behavior as a one-shot prefill engine
+        t_step = int(counts.max()) if self._uniform \
+            else _bucket(int(counts.max()))
+        tokens = np.zeros((self.B, t_step), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        final = {}
+        for i in run:
+            s = self.slots[i]
+            c = int(counts[i])
+            pos[i] = s.pos
+            if s.prefill is None:
+                tokens[i, 0] = s.generated[-1] if s.generated else 0
+            else:
+                st = s.prefill
+                tokens[i, :c] = st.feed[st.done:st.done + c]
+                final[i] = st.done + c == len(st.feed)
         keys = np.stack([s.key if s.key is not None
                          else np.zeros((2,), np.uint32) for s in self.slots])
         if self.paged and self._tables_dirty:
             self.cache = _with_tables(self.cache, jnp.asarray(self.tables))
             self._tables_dirty = False
-        # the decode step returns its block tables unchanged, so in steady
-        # state (no admissions/retirements) the paged tick is as cheap as
-        # the dense one: no table upload, no tree surgery
-        next_tok, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(last_tok)[:, None],
-            jnp.asarray(pos), jnp.asarray(active), jnp.asarray(keys),
-            self._live_width())
-        nt = np.asarray(next_tok)
-        for i in run_idx:
-            self.slots[i].generated.append(int(nt[i]))
-            self.slots[i].pos += 1
+        live_widths = jnp.asarray([len(s.blocks) for s in self.slots],
+                                  jnp.int32) if self.paged else None
+        # the step returns its block tables unchanged, so in steady state
+        # (no admissions/retirements) the paged tick is as cheap as the
+        # dense one: no table upload, no tree surgery
+        nxt, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(counts), jnp.asarray(keys),
+            self._live_width(), live_widths)
+        nt = np.asarray(nxt)
+        for i in run:
+            s = self.slots[i]
+            c = int(counts[i])
+            if s.prefill is None:
+                s.generated.append(int(nt[i]))
+                s.pos += 1
+            else:
+                st = s.prefill
+                st.done += c
+                s.pos += c
+                if final[i]:
+                    # chunk-aware sampling: only the final chunk's last-token
+                    # logits produce a token — the request's first generated
+                    # token at position len(feed), drawn under the same
+                    # position-keyed rule as every decode tick. A resumed
+                    # request restores its stashed continuation instead.
+                    s.generated = list(st.resume) if st.resume \
+                        else [int(nt[i])]
+                    s.prefill = None
+        return int(run.size)
+
+    def step(self) -> int:
+        """One scheduler tick: retire, admit, run the mixed token-budget
+        step (or the split decode/uniform-prefill sub-steps for recurrent
+        configs), retire again. Returns the number of rows advanced."""
         self._retire()
-        return len(run_idx)
+        self._admit()
+        if self._uniform:
+            has_pre = any(s.req is not None and s.prefill is not None
+                          for s in self.slots)
+            n = self._substep(want_prefill=False,
+                              allow_preempt=not has_pre)
+            if has_pre:
+                n += self._substep(want_decode=False,
+                                   allow_preempt=(n == 0))
+        else:
+            n = self._substep()
+        self._retire()
+        return n
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0

@@ -1,0 +1,390 @@
+"""Token-budget prefill engine: chunked-vs-one-shot bitwise equivalence at
+the model level (dense + paged + ring caches, clipped/gated, chunk sizes
+that do and don't divide the prompt), mixed prefill+decode ticks vs the
+sequential oracle, preemption-resume-through-chunks under sampling seeds,
+and the (priority, arrival) + watermark admission policy."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import apply_method
+from repro.models import model_init
+from repro.models.transformer import (
+    ModelConfig,
+    init_cache,
+    init_paged_cache,
+    model_apply,
+)
+from repro.serving import ContinuousBatcher, GenerateConfig, Request, generate
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny(**kw):
+    base = dict(name="tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                d_ff=64, vocab_size=64, pos="rope", max_seq_len=1024,
+                scan_layers=False, remat=False, mlp_kind="swiglu",
+                norm="rmsnorm")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _refs(params, cfg, prompts, max_new):
+    return [np.asarray(generate(params, cfg, jnp.asarray(p)[None, :],
+                                GenerateConfig(max_new_tokens=m))[0, len(p):])
+            for p, m in zip(prompts, max_new)]
+
+
+def _ref_free(params, cfg, prompt, max_new):
+    """Cache-free greedy oracle (works where generate's one-shot ring
+    prefill cannot: local_attn prompts longer than the window)."""
+    seq = list(map(int, prompt))
+    out = []
+    for _ in range(max_new):
+        logits, _ = model_apply(params, cfg,
+                                {"tokens": jnp.asarray([seq], jnp.int32)})
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        seq.append(tok)
+    return np.asarray(out, np.int32)
+
+
+def _chunked(params, cfg, cache, prompt, sizes, pad_to=None):
+    """Stream ``prompt`` through ``model_apply`` in chunks of ``sizes``
+    using the scheduler's contract: per-row pos vector + per-token active
+    mask dropping the padding tail. Returns (last real token's logits,
+    final cache)."""
+    off, last = 0, None
+    for c in sizes:
+        t = pad_to or c
+        buf = np.zeros((1, t), np.int32)
+        buf[0, :c] = prompt[off:off + c]
+        act = np.zeros((1, t), bool)
+        act[0, :c] = True
+        logits, aux = model_apply(params, cfg, {"tokens": jnp.asarray(buf)},
+                                  cache=cache,
+                                  pos=jnp.asarray([off], jnp.int32),
+                                  active=jnp.asarray(act))
+        cache = aux["cache"]
+        last = np.asarray(logits[0, c - 1])
+        off += c
+    return last, cache
+
+
+def _fresh_cache(cfg, paged):
+    if not paged:
+        return init_cache(cfg, 1, 32)
+    cache = init_paged_cache(cfg, 1, 32, num_blocks=6, block_size=8)
+    table = jnp.asarray([[2, 0, 3, -1]], jnp.int32)   # scrambled physical
+
+    def set_table(path, leaf):
+        if path and path[-1] == jax.tree_util.DictKey("block_table"):
+            return jnp.broadcast_to(table, leaf.shape[:-2] + table.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(set_table, cache)
+
+
+CHUNKINGS = ([4, 4, 4], [5, 5, 2], [7, 5])    # dividing and non-dividing
+
+
+class TestChunkedVsOneShot:
+    """Chunked prefill must be BITWISE equal to one-shot: the cache state
+    after streaming N chunks and the final token's logits are identical to
+    feeding the whole prompt at once — the slice-invariance contract that
+    keeps gamma = -alpha/T clipping and activation ranges stable across
+    serving-path changes."""
+
+    def _check(self, cfg, paged=False):
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(4, 60, size=12).astype(np.int32)
+        ref_last, ref_cache = _chunked(params, cfg, _fresh_cache(cfg, paged),
+                                       prompt, [12])
+        for sizes in CHUNKINGS:
+            last, cache = _chunked(params, cfg, _fresh_cache(cfg, paged),
+                                   prompt, sizes, pad_to=8)
+            np.testing.assert_array_equal(last, ref_last, err_msg=str(sizes))
+            for (pa, a), (pb, bb) in zip(
+                    jax.tree_util.tree_leaves_with_path(ref_cache),
+                    jax.tree_util.tree_leaves_with_path(cache)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(bb),
+                    err_msg=f"{sizes} {jax.tree_util.keystr(pa)}")
+
+    def test_dense_vanilla(self):
+        self._check(_tiny())
+
+    def test_dense_clipped(self):
+        self._check(apply_method(_tiny(), "clipped_softmax", alpha=4.0))
+
+    def test_dense_gated(self):
+        self._check(apply_method(_tiny(), "gated_attention", pi_init=0.5))
+
+    def test_paged_clipped(self):
+        self._check(apply_method(_tiny(max_seq_len=64), "clipped_softmax",
+                                 alpha=4.0), paged=True)
+
+    def test_paged_gated(self):
+        self._check(apply_method(_tiny(max_seq_len=64), "gated_attention",
+                                 pi_init=0.5), paged=True)
+
+    def test_ring_clipped(self):
+        """local_attn chunks attend over the PRE-write ring + fresh chunk
+        (separate KV entries), so multi-token writes cannot evict history
+        earlier queries of the same chunk still need — and the nonzero
+        summands keep their logical order, so equality stays bitwise.
+        alpha-resolved gamma must pin to the RING length, not the
+        chunk-size-dependent concat axis (L + T), or clipping thresholds
+        drift with the chunking. init_std=0.5 keeps attention probs spread
+        enough that clipping genuinely engages (at tiny init every prob
+        clips to zero and the gamma assertions would be vacuous)."""
+        cfg = apply_method(
+            _tiny(pattern=("attn", "local_attn"), window=8, max_seq_len=64,
+                  init_std=0.5),
+            "clipped_softmax", alpha=4.0)
+        self._check(cfg)
+        # non-vacuity guards: on these params clipping changes the output
+        # (vs vanilla) and the output is sensitive to gamma
+        from repro.core.softmax import ClippedSoftmaxConfig
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(4, 60, size=12).astype(np.int32)
+        ref, _ = _chunked(params, cfg, init_cache(cfg, 1, 32), prompt, [12])
+        for sm in (ClippedSoftmaxConfig(), ClippedSoftmaxConfig(gamma=-10.0)):
+            alt_cfg = dataclasses.replace(cfg, softmax_cfg=sm)
+            alt, _ = _chunked(params, alt_cfg, init_cache(alt_cfg, 1, 32),
+                              prompt, [12])
+            assert not np.array_equal(alt, ref), sm
+
+
+class TestLongRingPrompt:
+    """Acceptance: a prompt longer than the local_attn window is admitted
+    via chunked prefill and its generated tokens exactly match the
+    cache-free oracle — the capability the seed's one-shot ring limit
+    (a ValueError at admission / a RuntimeError at preemption) blocked."""
+
+    @pytest.mark.parametrize("kw", [
+        dict(batch_size=2, max_len=32),
+        dict(batch_size=2, max_len=32, paged=True, block_size=8),
+        dict(batch_size=2, max_len=32, token_budget=5),
+        dict(batch_size=2, max_len=32, paged=True, block_size=8,
+             token_budget=5),
+    ])
+    def test_long_prompt_matches_oracle(self, kw):
+        cfg = _tiny(pattern=("attn", "local_attn"), window=8, max_seq_len=64)
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(4, 60, size=20).astype(np.int32)   # 20 > 8
+        ref = _ref_free(params, cfg, prompt, 6)
+        b = ContinuousBatcher(params, cfg, **kw)
+        b.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+        np.testing.assert_array_equal(b.run()[0].output, ref, err_msg=str(kw))
+
+
+class TestMixedTick:
+    """Acceptance: one forward pass carries >= 2 prefill chunks from
+    different requests AND an actively decoding row, and every request
+    still emits exactly the sequential oracle's tokens."""
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_mixed_tick_matches_oracle(self, paged):
+        cfg, _ = _tiny(), None
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(4, 60, size=n).astype(np.int32)
+                   for n in (4, 10, 9)]
+        max_new = [10, 5, 5]
+        refs = _refs(params, cfg, prompts, max_new)
+        kw = dict(paged=True, block_size=8) if paged else {}
+        b = ContinuousBatcher(params, cfg, batch_size=3, max_len=32,
+                              token_budget=8, prefill_chunk=4, **kw)
+        b.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=max_new[0]))
+        assert b.step() == 1                      # uid 0 prefills + samples
+        # uid 0 is now decoding; two long prompts arrive together
+        b.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=max_new[1]))
+        b.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=max_new[2]))
+        assert b.step() == 3
+        counts = np.sort(b.last_counts)[::-1]
+        # one decode token + two chunks (budget 8 - 1 decode = 7 -> 4 + 3)
+        assert counts[0] > 1 and counts[1] > 1 and counts[2] == 1, counts
+        out = {r.uid: r.output for r in b.run()}
+        for u, ref in enumerate(refs):
+            np.testing.assert_array_equal(out[u], ref, err_msg=f"uid={u}")
+
+    def test_empty_prompt_rejected_at_submit(self):
+        """A zero-length prompt has no logits position to sample from; it
+        must be rejected up front, not wedge the planner (regression: it
+        used to stall forever and crash dense mode through the paged-only
+        pool-too-small path)."""
+        cfg = _tiny()
+        params = model_init(KEY, cfg)
+        b = ContinuousBatcher(params, cfg, batch_size=1, max_len=16)
+        with pytest.raises(ValueError, match="empty prompt"):
+            b.submit(Request(uid=0, prompt=np.asarray([], np.int32),
+                             max_new_tokens=4))
+
+    def test_budget_bounds_tick_tokens(self):
+        """Every sub-step's carved token count respects the budget."""
+        cfg = _tiny()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(9)
+        b = ContinuousBatcher(params, cfg, batch_size=3, max_len=32,
+                              token_budget=4)
+        for u in range(3):
+            b.submit(Request(uid=u, prompt=rng.integers(
+                4, 60, size=10).astype(np.int32), max_new_tokens=3))
+        while b.queue or any(s.req for s in b.slots):
+            n_decode = sum(1 for s in b.slots
+                           if s.req is not None and s.prefill is None)
+            b.step()
+            if b.last_counts is not None:
+                # decode rows are never starved; prefill carving fills the rest
+                assert b.last_counts.sum() <= max(b.token_budget, n_decode)
+
+
+class TestRecurrentUniformSteps:
+    @pytest.mark.parametrize("token_budget", [256, 4])
+    def test_griffin_batcher_matches_oracle(self, token_budget):
+        """Recurrent configs run split decode/uniform-prefill sub-steps
+        (ragged rows are inexpressible for a recurrence) with the EXACT
+        chunk length — a padded tail would stream garbage through the
+        recurrence. budget=4 additionally chunks the prompts, carrying
+        h/conv state across chunks (a capability the one-shot engine never
+        exercised)."""
+        from repro.nn.recurrent import RGLRUConfig
+        cfg = _tiny(pattern=("griffin", "attn"), max_seq_len=64,
+                    rglru=RGLRUConfig(width=32, conv_width=4))
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(4, 60, size=n).astype(np.int32)
+                   for n in (9, 5, 7)]
+        refs = [_ref_free(params, cfg, p, 5) for p in prompts]
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=32,
+                              token_budget=token_budget)
+        for u, p in enumerate(prompts):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=5))
+        out = {r.uid: r.output for r in b.run()}
+        for u, ref in enumerate(refs):
+            np.testing.assert_array_equal(out[u], ref, err_msg=f"uid={u}")
+
+
+class TestPreemptResumeChunks:
+    @pytest.mark.slow
+    def test_sampled_preemption_past_window_resumes_exactly(self):
+        """Recompute-preemption of rows PAST the local_attn window (refused
+        by the seed engine) under temperature sampling: the resume re-enters
+        the chunked prefill path and position-keyed draws reproduce the
+        continuation exactly."""
+        cfg = _tiny(pattern=("attn", "local_attn"), window=8, max_seq_len=64)
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(4, 60, size=8).astype(np.int32)
+                   for _ in range(2)]
+
+        def run(**kw):
+            b = ContinuousBatcher(params, cfg, batch_size=2, max_len=32,
+                                  gen=GenerateConfig(temperature=0.8, top_k=16),
+                                  paged=True, block_size=4, **kw)
+            for u, p in enumerate(prompts):
+                b.submit(Request(uid=u, prompt=p, max_new_tokens=12,
+                                 seed=100 + u))
+            return {r.uid: r.output for r in b.run()}
+
+        roomy = run()
+        tight = run(num_blocks=6)    # both rows stall past the window
+        for u in roomy:
+            np.testing.assert_array_equal(tight[u], roomy[u],
+                                          err_msg=f"uid={u}")
+
+
+class TestAdmissionPolicy:
+    def _reqs(self, rng, n, prio):
+        return [Request(uid=u, prompt=rng.integers(4, 60, size=4)
+                        .astype(np.int32), max_new_tokens=2,
+                        priority=prio[u]) for u in range(n)]
+
+    def test_priority_order_beats_fifo(self):
+        """Higher priority admits first regardless of submission order;
+        equal priorities stay FIFO by arrival (no starvation reordering)."""
+        cfg = _tiny()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(3)
+        b = ContinuousBatcher(params, cfg, batch_size=1, max_len=16)
+        for r in self._reqs(rng, 5, prio=[0, 0, 5, 0, 5]):
+            b.submit(r)
+        b.run()
+        admitted = [r.uid for r in sorted(b.done, key=lambda r: r.arrival)]
+        assert admitted == [0, 1, 2, 3, 4]          # bookkeeping sanity
+        # completion order == admission order at batch_size 1
+        assert [r.uid for r in b.done] == [2, 4, 0, 1, 3]
+
+    def test_equal_priority_is_starvation_free(self):
+        """With equal priorities the queue is exactly FIFO: a request can
+        never be overtaken by a later equal-priority arrival."""
+        cfg = _tiny()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(3)
+        b = ContinuousBatcher(params, cfg, batch_size=1, max_len=16)
+        for r in self._reqs(rng, 6, prio=[1] * 6):
+            b.submit(r)
+        b.run()
+        assert [r.uid for r in b.done] == list(range(6))
+
+    def test_watermark_defers_admission(self):
+        """Paged admission halts while free_blocks < admit_watermark and
+        resumes once retirement replenishes the pool."""
+        cfg = _tiny(max_seq_len=64)
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(4)
+        prompts = [rng.integers(4, 60, size=8).astype(np.int32)
+                   for _ in range(2)]
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=32,
+                              paged=True, block_size=4, num_blocks=8,
+                              admit_watermark=7)
+        b.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=4))
+        b.step()                   # uid 0 prefills, holds 2 blocks
+        b.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=4))
+        b.step()
+        # available = 6 < watermark 7: uid 1 must wait despite a free slot
+        assert sum(s.req is not None for s in b.slots) == 1
+        assert len(b.queue) == 1
+        out = {r.uid: r.output for r in b.run()}
+        assert sorted(out) == [0, 1]                # admitted after retire
+        refs = _refs(params, cfg, prompts, [4, 4])
+        for u, ref in enumerate(refs):
+            np.testing.assert_array_equal(out[u], ref, err_msg=f"uid={u}")
+
+    def test_preempted_request_keeps_arrival_rank(self):
+        """A preempted request re-queues at its ORIGINAL arrival rank, so
+        it re-admits ahead of later equal-priority arrivals."""
+        cfg = _tiny(max_seq_len=64)
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(4, 60, size=8).astype(np.int32)
+                   for _ in range(3)]
+        max_new = [12, 12, 12]
+        refs = _refs(params, cfg, prompts, max_new)
+        # 6-block pool: uids 0/1 grow to 5 blocks each -> uid 1 (youngest)
+        # is preempted, freeing its slot; uid 2 arrived later at the same
+        # priority and must not overtake the re-queued uid 1 for it
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=32,
+                              paged=True, block_size=4, num_blocks=6)
+        for u, (p, m) in enumerate(zip(prompts, max_new)):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=m))
+        seen_second_occupant = set()
+        while b.queue or any(s.req for s in b.slots):
+            b.step()
+            for s in b.slots:
+                if s.req is not None and s.req.uid != 0:
+                    seen_second_occupant.add(s.req.uid)
+        out = {r.uid: r.output for r in b.done}
+        for u, ref in enumerate(refs):
+            np.testing.assert_array_equal(out[u], ref, err_msg=f"uid={u}")
+        finished = [r.uid for r in b.done]
+        # uid 1 re-admits (and so finishes) ahead of the later arrival
+        assert finished.index(1) < finished.index(2)
+        assert 1 in seen_second_occupant and 2 in seen_second_occupant

@@ -120,6 +120,48 @@ class TestPagedKernelFast:
             np.testing.assert_allclose(np.asarray(sliced), np.asarray(full),
                                        atol=2e-5, err_msg=backend)
 
+    def test_per_row_live_widths_exact(self):
+        """Masking each row's gather read at its OWN block count (instead of
+        the tick max) must be bitwise-neutral: allocation is prefix-dense,
+        so the masked entries were -1 (already dead) — AND it must win when
+        they are not: stale garbage ids beyond a row's count are hidden by
+        the per-row mask where the bare -1 test would read them."""
+        q, kp, vp, tbl, pos, _ = _case(w=8, seed=3)
+        counts = np.sum(np.asarray(tbl) >= 0, axis=1)
+        cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                              softmax=ClippedSoftmaxConfig(alpha=4.0))
+        lws = jnp.asarray(counts, jnp.int32)
+        # at a FIXED table width the per-row mask is bitwise-neutral (the
+        # masked entries contributed exact zeros already) — both without
+        # and combined with the static live_width slice
+        for lw in (None, int(counts.max())):
+            full = paged_attention(q, kp, vp, tbl, cfg, q_offset=pos,
+                                   backend="gather", live_width=lw)
+            per_row = paged_attention(q, kp, vp, tbl, cfg, q_offset=pos,
+                                      backend="gather", live_width=lw,
+                                      live_widths=lws)
+            np.testing.assert_array_equal(np.asarray(per_row),
+                                          np.asarray(full), err_msg=str(lw))
+        # stale ids beyond each row's count: the per-row mask must hide
+        # them. Discriminating case needs causal=False — under a causal
+        # mask those positions are unreachable anyway, which is exactly why
+        # masking them is bitwise-free in the serving path.
+        cfg_nc = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
+                                 causal=False)
+        full_nc = paged_attention(q, kp, vp, tbl, cfg_nc, q_offset=pos,
+                                  backend="gather")
+        stale = np.asarray(tbl).copy()
+        for b in range(stale.shape[0]):
+            stale[b, counts[b]:] = 0               # valid-looking garbage
+        leaky = paged_attention(q, kp, vp, jnp.asarray(stale), cfg_nc,
+                                q_offset=pos, backend="gather")
+        assert not np.array_equal(np.asarray(leaky), np.asarray(full_nc))
+        with_stale = paged_attention(q, kp, vp, jnp.asarray(stale), cfg_nc,
+                                     q_offset=pos, backend="gather",
+                                     live_widths=jnp.asarray(counts, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(with_stale),
+                                      np.asarray(full_nc))
+
     def test_bf16(self):
         q, kp, vp, tbl, pos, gate = _case(dtype=jnp.bfloat16)
         cfg = AttentionConfig(n_heads=4, n_kv_heads=2, d_head=16,
