@@ -1,0 +1,18 @@
+"""Static analysis + runtime guards for the repro serving contracts.
+
+* ``repro.analysis.lint`` — AST contract linter
+  (``python -m repro.analysis.lint src/``), rules R001–R005; see
+  ``docs/contracts.md`` for the contracts and the suppression syntax.
+* ``repro.analysis.compile_guard`` — pytest plugin counting jax.jit
+  compilations per test (``@pytest.mark.compile_budget(n)``), the runtime
+  tripwire for recompile regressions the linter cannot prove statically.
+"""
+from repro.analysis.engine import (Finding, LintContext, Rule, SourceFile,
+                                   default_rules, render_json, render_text,
+                                   run_lint)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES", "Finding", "LintContext", "Rule", "SourceFile",
+    "default_rules", "render_json", "render_text", "run_lint",
+]

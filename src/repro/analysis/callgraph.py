@@ -1,0 +1,340 @@
+"""Lightweight jit-seeded call graph over the linted files.
+
+R001 (host-sync) must know whether a function can execute *inside* a
+traced region. Rather than a full interprocedural analysis, this builds
+the cheap approximation that is exact for this repo's idioms:
+
+  * **Seeds** — functions handed to ``jax.jit`` (decorator form,
+    ``partial(jax.jit, ...)`` decorator form, or a ``jax.jit(fn, ...)``
+    call whose first argument resolves to a known function) and kernels
+    handed to ``pl.pallas_call``.
+  * **Edges** — inside a function body, every ``Name`` that resolves to a
+    function visible in scope (enclosing defs, module-level defs, or a
+    ``from repro.x import fn`` / ``import repro.x as m`` + ``m.fn``
+    import) adds an edge. Resolving *references* rather than just direct
+    calls keeps closure-passing idioms (``jax.lax.scan(body, ...)``,
+    ``jax.vmap(per_group)``, ``jax.checkpoint(group_apply)``) in the
+    graph for free.
+  * **Reachable** — the closure of the seeds over those edges. A function
+    is "jit-reachable" if tracing can enter it; host-side drivers (the
+    scheduler's slot bookkeeping, PTQ calibration loops) that merely
+    *call* jitted functions are not.
+
+Known blind spot, by design: method calls through objects
+(``self.x(...)``, ``ctx.act(...)``) are not resolved — the repo's traced
+regions are plain functions, and resolving attribute calls would need
+type inference for little gain here.
+
+``JitSite`` records every ``jax.jit`` call with its parsed
+``static_argnums``/``static_argnames`` and the name the wrapper is bound
+to (``train_step = jax.jit(...)`` / ``self._step_fn = jax.jit(...)``), so
+R002 can match later call sites of the jitted wrapper against its static
+positions.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.engine import SourceFile
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Textual dotted path of a Name/Attribute chain ('jax.jit'), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def literal_int_tuple(node: Optional[ast.AST]) -> Tuple[int, ...]:
+    if node is None:
+        return ()
+    try:
+        v = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(v, int):
+        return (v,)
+    if isinstance(v, (tuple, list)):
+        return tuple(x for x in v if isinstance(x, int))
+    return ()
+
+
+def literal_str_tuple(node: Optional[ast.AST]) -> Tuple[str, ...]:
+    if node is None:
+        return ()
+    try:
+        v = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    if isinstance(v, (tuple, list)):
+        return tuple(x for x in v if isinstance(x, str))
+    return ()
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    key: str                       # "module:qualname"
+    module: str
+    qualname: str
+    node: ast.AST                  # FunctionDef / AsyncFunctionDef / Lambda
+    refs: Set[str] = dataclasses.field(default_factory=set)
+    seed: Optional[str] = None     # None | "jit" | "pallas"
+
+
+@dataclasses.dataclass
+class JitSite:
+    module: str
+    call: ast.Call                 # the jax.jit(...) call
+    fn_key: Optional[str]          # resolved key of the wrapped function
+    static_argnums: Tuple[int, ...]
+    static_argnames: Tuple[str, ...]
+    bound_to: Optional[str] = None  # 'name' / 'self.attr' the wrapper binds
+
+
+class _ModuleWalker(ast.NodeVisitor):
+    """Collect functions, import aliases, references and jit/pallas seeds
+    of one module, with lexical scoping for nested defs."""
+
+    def __init__(self, src: SourceFile, graph: "CallGraph"):
+        self.src = src
+        self.graph = graph
+        self.module = src.module
+        # import alias tables
+        self.mod_alias: Dict[str, str] = {}    # local name -> module path
+        self.sym_alias: Dict[str, str] = {}    # local name -> "module:sym"
+        # scope stack: list of {local fn name -> key}
+        self.scopes: List[Dict[str, str]] = [{}]
+        self.qual: List[str] = []
+        self.fn_stack: List[FunctionInfo] = []
+        self._prescan_imports(src.tree)
+        self._collect(src.tree)
+
+    # -- imports ---------------------------------------------------------
+    def _prescan_imports(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.mod_alias[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.sym_alias[a.asname or a.name] = (
+                        f"{node.module}:{a.name}")
+
+    # -- collection ------------------------------------------------------
+    def _collect(self, node: ast.AST) -> None:
+        """Two passes per scope body: register defs first (so forward
+        references and mutual recursion resolve), then walk bodies."""
+        body = node.body if hasattr(node, "body") else []
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._register(stmt)
+        for stmt in body:
+            self.visit(stmt)
+
+    def _register(self, node: ast.AST, name: Optional[str] = None) -> str:
+        name = name or node.name
+        qual = ".".join(self.qual + [name])
+        key = f"{self.module}:{qual}"
+        if key not in self.graph.functions:
+            self.graph.functions[key] = FunctionInfo(
+                key=key, module=self.module, qualname=qual, node=node)
+        self.scopes[-1][name] = key
+        return key
+
+    def resolve(self, name: str) -> Optional[str]:
+        """Resolve a bare name to a function key through the scope stack,
+        then through ``from x import f`` aliases."""
+        for scope in reversed(self.scopes):
+            if name in scope:
+                return scope[name]
+        return self.sym_alias.get(name)
+
+    def resolve_dotted(self, text: str) -> Optional[str]:
+        """Resolve 'alias.attr' where alias is an imported module."""
+        if "." not in text:
+            return self.resolve(text)
+        root, rest = text.split(".", 1)
+        mod = self.mod_alias.get(root)
+        if mod is not None and "." not in rest:
+            return f"{mod}:{rest}"
+        sym = self.sym_alias.get(root)
+        if sym is not None and "." not in rest:
+            # from repro import serving; serving.decode.fn — out of scope
+            return None
+        return None
+
+    def _canonical(self, text: Optional[str]) -> Optional[str]:
+        """Expand the leading import alias of a dotted path ('pl.pallas_call'
+        -> 'jax.experimental.pallas.pallas_call')."""
+        if not text:
+            return text
+        root, _, rest = text.partition(".")
+        mod = self.mod_alias.get(root)
+        if mod and rest:
+            return f"{mod}.{rest}"
+        sym = self.sym_alias.get(root)
+        if sym and not rest:
+            return sym.replace(":", ".")
+        return text
+
+    # -- visitors --------------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_def(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_def(node)
+
+    def _visit_def(self, node) -> None:
+        key = self.scopes[-1].get(node.name) or self._register(node)
+        info = self.graph.functions[key]
+        if self._jit_decorated(node):
+            info.seed = "jit"
+            self.graph.jit_sites.append(JitSite(
+                module=self.module, call=None, fn_key=key,
+                static_argnums=self._deco_static(node, "static_argnums"),
+                static_argnames=self._deco_static(node, "static_argnames",
+                                                  names=True),
+                bound_to=node.name))
+        for d in node.decorator_list:
+            self.visit(d)
+        self.qual.append(node.name)
+        self.scopes.append({})
+        self.fn_stack.append(info)
+        self._collect(node)
+        self.fn_stack.pop()
+        self.scopes.pop()
+        self.qual.pop()
+
+    def _jit_decorated(self, node) -> bool:
+        for d in node.decorator_list:
+            text = self._canonical(dotted(d if not isinstance(d, ast.Call)
+                                          else d.func))
+            if text == "jax.jit":
+                return True
+            if isinstance(d, ast.Call) and text in (
+                    "functools.partial", "partial") and d.args:
+                if self._canonical(dotted(d.args[0])) == "jax.jit":
+                    return True
+        return False
+
+    def _deco_static(self, node, kw: str, names: bool = False):
+        for d in node.decorator_list:
+            if isinstance(d, ast.Call):
+                for k in d.keywords:
+                    if k.arg == kw:
+                        return (literal_str_tuple(k.value) if names
+                                else literal_int_tuple(k.value))
+        return ()
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # lambdas participate as anonymous functions of the enclosing scope
+        if self.fn_stack:
+            self._refs_from(node.body)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load) and self.fn_stack:
+            key = self.resolve(node.id)
+            if key is not None:
+                self.fn_stack[-1].refs.add(key)
+
+    def _refs_from(self, node: ast.AST) -> None:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                key = self.resolve(n.id)
+                if key is not None:
+                    self.fn_stack[-1].refs.add(key)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        text = self._canonical(dotted(node.func))
+        if text == "jax.jit":
+            fn_key = None
+            if node.args:
+                arg_text = dotted(node.args[0])
+                if arg_text is not None:
+                    fn_key = (self.resolve(arg_text) if "." not in arg_text
+                              else self.resolve_dotted(arg_text))
+            kws = {k.arg: k.value for k in node.keywords}
+            site = JitSite(
+                module=self.module, call=node, fn_key=fn_key,
+                static_argnums=literal_int_tuple(kws.get("static_argnums")),
+                static_argnames=literal_str_tuple(kws.get("static_argnames")))
+            self.graph.jit_sites.append(site)
+            if fn_key is not None and fn_key in self.graph.functions:
+                self.graph.functions[fn_key].seed = "jit"
+        elif text is not None and text.endswith("pallas_call") and node.args:
+            arg_text = dotted(node.args[0])
+            fn_key = self.resolve(arg_text) if arg_text else None
+            if fn_key is None and isinstance(node.args[0], ast.Call):
+                # functools.partial(_kernel, cfg=...) wrapping the kernel
+                inner = node.args[0]
+                if inner.args:
+                    t = dotted(inner.args[0])
+                    fn_key = self.resolve(t) if t else None
+            if fn_key is not None and fn_key in self.graph.functions:
+                self.graph.functions[fn_key].seed = "pallas"
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # visit children first so visit_Call has registered the JitSite,
+        # then record `name = jax.jit(...)` / `self.x = jax.jit(...)`
+        self.generic_visit(node)
+        if isinstance(node.value, ast.Call) and \
+                self._canonical(dotted(node.value.func)) == "jax.jit":
+            target = dotted(node.targets[0]) if node.targets else None
+            for site in reversed(self.graph.jit_sites):
+                if site.call is node.value:
+                    site.bound_to = target
+                    break
+
+
+class CallGraph:
+    """Build once per lint run; exposes jit-reachability and jit sites."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.jit_sites: List[JitSite] = []
+        self.walkers: Dict[str, _ModuleWalker] = {}
+        for src in files:
+            self.walkers[src.module] = _ModuleWalker(src, self)
+        self.reachable: Set[str] = self._closure()
+        self._reachable_nodes = {
+            id(self.functions[k].node) for k in self.reachable}
+
+    def _closure(self) -> Set[str]:
+        seen: Set[str] = set()
+        frontier = [k for k, f in self.functions.items() if f.seed]
+        while frontier:
+            k = frontier.pop()
+            if k in seen or k not in self.functions:
+                continue
+            seen.add(k)
+            frontier.extend(self.functions[k].refs - seen)
+        return seen
+
+    # ------------------------------------------------------------------
+    def is_reachable(self, node: ast.AST) -> bool:
+        """True if this FunctionDef node can execute under tracing."""
+        return id(node) in self._reachable_nodes
+
+    def seed_of(self, node: ast.AST) -> Optional[str]:
+        for f in self.functions.values():
+            if f.node is node:
+                return f.seed
+        return None
+
+    def sites_in(self, module: str) -> List[JitSite]:
+        return [s for s in self.jit_sites if s.module == module]
+
+    def function(self, key: str) -> Optional[FunctionInfo]:
+        return self.functions.get(key)

@@ -1,0 +1,152 @@
+"""Runtime recompile tripwire: count jax.jit compilations per test.
+
+The static pass (R002) proves bucketing *syntactically*; this guard
+proves it *operationally* — a test sweeps the decode tick across live
+widths / chunk sizes and asserts the number of compiled specializations
+stays within the pow-2 bucket budget. Any change that lets a raw
+runtime-varying value reach a static arg or a shape shows up as a
+compile-count explosion and fails the test.
+
+Mechanism: ``jax.jit`` wrappers expose ``_cache_size()`` (the number of
+compiled variants held by the pjit cache). ``install()`` monkeypatches
+``jax.jit`` so every wrapper created afterwards is tracked in a
+``WeakSet``; ``CompileGuard`` snapshots the aggregate cache size on entry
+and reports the delta. Wrappers created *before* ``install()`` (module
+import time) are still countable by passing them explicitly via
+``track``.
+
+pytest integration (wired in ``tests/conftest.py``)::
+
+    @pytest.mark.compile_budget(6)
+    def test_decode_tick_sweep(...):
+        ...
+
+fails with ``CompileBudgetExceeded`` if the test body compiles more than
+6 jit specializations. Tests without the marker are unaffected.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Iterable, List, Optional
+
+import jax
+
+_tracked: "weakref.WeakSet" = weakref.WeakSet()
+_orig_jit = None
+
+
+def install() -> None:
+    """Monkeypatch ``jax.jit`` so new wrappers are tracked. Idempotent."""
+    global _orig_jit
+    if _orig_jit is not None:
+        return
+    _orig_jit = jax.jit
+
+    def _tracking_jit(*args, **kwargs):
+        wrapped = _orig_jit(*args, **kwargs)
+        try:
+            _tracked.add(wrapped)
+        except TypeError:  # non-weakrefable wrapper: skip tracking
+            pass
+        return wrapped
+
+    jax.jit = _tracking_jit
+
+
+def uninstall() -> None:
+    global _orig_jit
+    if _orig_jit is not None:
+        jax.jit = _orig_jit
+        _orig_jit = None
+
+
+def _cache_size(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:  # noqa: BLE001 - wrapper died mid-read; count as 0
+        return 0
+
+
+def track(fn) -> None:
+    """Explicitly track a jit wrapper created before ``install()``."""
+    try:
+        _tracked.add(fn)
+    except TypeError:
+        pass
+
+
+class CompileBudgetExceeded(AssertionError):
+    pass
+
+
+class CompileGuard:
+    """Context manager measuring jit compilations within its scope.
+
+    >>> with CompileGuard(budget=4) as guard:
+    ...     for w in (1, 2, 3, 5, 8):
+    ...         step(x, _bucket(w))
+    >>> guard.compiles  # ≤ 4: buckets 1, 2, 4, 8
+    """
+
+    def __init__(self, budget: Optional[int] = None,
+                 extra: Iterable = ()) -> None:
+        self.budget = budget
+        self._extra: List = list(extra)
+        self._baseline = 0
+        self.compiles = 0
+
+    def _wrappers(self) -> List:
+        seen = set()
+        out = []
+        for fn in list(_tracked) + self._extra:
+            if id(fn) not in seen:
+                seen.add(id(fn))
+                out.append(fn)
+        return out
+
+    def _total(self) -> int:
+        return sum(_cache_size(fn) for fn in self._wrappers())
+
+    def __enter__(self) -> "CompileGuard":
+        install()
+        self._baseline = self._total()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.compiles = self._total() - self._baseline
+        if exc_type is None and self.budget is not None and \
+                self.compiles > self.budget:
+            raise CompileBudgetExceeded(
+                f"compiled {self.compiles} jit specializations, budget is "
+                f"{self.budget} — a static arg or shape is varying per "
+                f"call instead of being pow-2 bucketed")
+
+
+# ==========================================================================
+# pytest plugin
+# ==========================================================================
+def pytest_configure(config) -> None:
+    config.addinivalue_line(
+        "markers",
+        "compile_budget(n): fail the test if its body compiles more than "
+        "n jax.jit specializations (recompile-regression tripwire)")
+    install()
+
+
+def make_autouse_fixture(pytest):
+    """Build the autouse fixture enforcing ``compile_budget`` markers;
+    called from tests/conftest.py with the pytest module."""
+
+    @pytest.fixture(autouse=True)
+    def _compile_budget_guard(request):
+        marker = request.node.get_closest_marker("compile_budget")
+        if marker is None:
+            yield
+            return
+        budget = marker.args[0] if marker.args else None
+        with CompileGuard(budget=budget) as guard:
+            yield
+        request.node.user_properties.append(
+            ("jit_compiles", guard.compiles))
+
+    return _compile_budget_guard

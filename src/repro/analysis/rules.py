@@ -1,0 +1,719 @@
+"""The JAX/Pallas contract rules (R001–R005).
+
+Each rule encodes one convention this repo's serving stack depends on;
+``docs/contracts.md`` states the contracts in prose, the rule docstrings
+state the exact detection heuristic (all of them are intentionally
+*lightweight*: single-pass, syntactic + local taint, no type inference —
+cheap enough to run on every push, precise enough that the current tree
+lints clean with a handful of reasoned suppressions).
+
+Shared machinery: a local taint analysis. A function's "tainted" names
+start at its parameters (minus ones whose annotation marks them as
+non-traced python scalars/configs) and flow through assignments;
+``.shape`` / ``.dtype`` / ``len()`` access *kills* taint, because shapes
+are static python values under tracing. R001 and R005 both ride on it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.callgraph import dotted
+from repro.analysis.engine import Finding, LintContext, Rule, SourceFile
+
+# annotations that mark a parameter as a non-traced python value: static
+# scalars, config dataclasses, strings. Anything else (or no annotation)
+# is conservatively assumed traced.
+_UNTRACED_ANN_RE = re.compile(r"\b(int|float|bool|str)\b|Config\b")
+# attribute reads that produce static python values from traced arrays
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "weak_type"}
+# calls whose *result* is a host python value (the call itself may still
+# be a violation — R001 checks that separately)
+_UNTAINT_CALLS = {"int", "float", "bool", "str", "len", "isinstance",
+                  "hasattr", "getattr", "range", "type", "repr"}
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _all_args(fn: ast.FunctionDef) -> List[ast.arg]:
+    a = fn.args
+    out = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    if a.vararg:
+        out.append(a.vararg)
+    if a.kwarg:
+        out.append(a.kwarg)
+    return out
+
+
+def param_taint(fn: ast.FunctionDef) -> Set[str]:
+    """Initial tainted-name set: parameters that may hold traced values."""
+    tainted: Set[str] = set()
+    for arg in _all_args(fn):
+        if arg.arg in ("self", "cls"):
+            continue
+        if arg.annotation is not None:
+            ann = ast.unparse(arg.annotation)
+            if _UNTRACED_ANN_RE.search(ann) and "Array" not in ann:
+                continue
+        tainted.add(arg.arg)
+    return tainted
+
+
+def is_tainted(node: ast.AST, tainted: Set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _SHAPE_ATTRS:
+            return False
+        return is_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        fname = dotted(node.func)
+        if fname in _UNTAINT_CALLS:
+            return False
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("item", "tolist"):
+            return False
+        if isinstance(node.func, ast.Attribute) and \
+                is_tainted(node.func.value, tainted):
+            return True          # method on a traced value -> traced
+        return any(is_tainted(a, tainted) for a in node.args) or \
+            any(is_tainted(k.value, tainted) for k in node.keywords)
+    if isinstance(node, (ast.Constant, ast.Lambda)):
+        return False
+    return any(is_tainted(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _assign_targets(node: ast.AST) -> List[str]:
+    names: List[str] = []
+    targets = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = [node.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                names.append(n.id)
+    return names
+
+
+def walk_statements(fn: ast.FunctionDef, tainted: Set[str], on_stmt) -> None:
+    """Source-order statement walk with taint propagation. ``on_stmt`` is
+    called with (stmt, tainted) *before* the statement's own assignment
+    effects apply. Nested function bodies are skipped (they are analyzed
+    as functions in their own right)."""
+
+    def walk(body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            on_stmt(stmt, tainted)
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                value = stmt.value
+                if value is not None:
+                    t = is_tainted(value, tainted)
+                    for name in _assign_targets(stmt):
+                        (tainted.add if t else tainted.discard)(name)
+            elif isinstance(stmt, ast.AugAssign):
+                if is_tainted(stmt.value, tainted):
+                    for name in _assign_targets(stmt):
+                        tainted.add(name)
+            elif isinstance(stmt, ast.For):
+                t = is_tainted(stmt.iter, tainted)
+                for n in ast.walk(stmt.target):
+                    if isinstance(n, ast.Name):
+                        (tainted.add if t else tainted.discard)(n.id)
+                walk(stmt.body)
+                walk(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                walk(stmt.body)
+                walk(stmt.orelse)
+            elif isinstance(stmt, ast.If):
+                walk(stmt.body)
+                walk(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                walk(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                walk(stmt.body)
+                for h in stmt.handlers:
+                    walk(h.body)
+                walk(stmt.orelse)
+                walk(stmt.finalbody)
+
+    walk(fn.body)
+
+
+def _stmt_exprs(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Expression subtrees of one statement, excluding nested suites (those
+    are walked as their own statements) and nested function bodies."""
+    if isinstance(stmt, ast.Assign):
+        yield stmt.value
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        if stmt.value is not None:
+            yield stmt.value
+    elif isinstance(stmt, (ast.Expr, ast.Return)):
+        if stmt.value is not None:
+            yield stmt.value
+    elif isinstance(stmt, (ast.If, ast.While)):
+        yield stmt.test
+    elif isinstance(stmt, ast.For):
+        yield stmt.iter
+    elif isinstance(stmt, ast.With):
+        for item in stmt.items:
+            yield item.context_expr
+    elif isinstance(stmt, ast.Assert):
+        yield stmt.test
+    elif isinstance(stmt, ast.Raise):
+        if stmt.exc is not None:
+            yield stmt.exc
+
+
+# ==========================================================================
+# R001 — host sync inside jit-reachable code
+# ==========================================================================
+class HostSyncRule(Rule):
+    """``int()``/``float()``/``bool()``/``.item()``/``.tolist()``/
+    ``np.asarray()``/``jax.device_get()`` applied to a value that flows
+    from a traced argument, inside a function reachable from a ``jax.jit``
+    or ``pallas_call`` seed. Under tracing these either fail
+    (``TracerConversionError``) or, worse, silently bake a traced value
+    into a constant; in host code they are fine — which is exactly why the
+    rule is scoped by the call graph instead of firing on every cast."""
+
+    id = "R001"
+    title = "host sync in jit-reachable code"
+    contract = ("jit-reachable code must keep traced values traced: no "
+                "int()/float()/.item()/np.asarray on values flowing from "
+                "traced args")
+
+    _CASTS = {"int", "float", "bool", "complex"}
+    _ATTRS = {"item", "tolist"}
+    _NP_FNS = {"asarray", "array", "copy", "ascontiguousarray"}
+
+    def check(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        graph = ctx.graph
+        walker = graph.walkers.get(src.module)
+        np_aliases = {"numpy"} | {
+            a for a, m in (walker.mod_alias.items() if walker else ())
+            if m == "numpy"}
+        for fn in iter_functions(src.tree):
+            if not graph.is_reachable(fn):
+                continue
+            yield from self._check_fn(src, fn, np_aliases)
+
+    def _check_fn(self, src: SourceFile, fn: ast.FunctionDef,
+                  np_aliases: Set[str]) -> Iterator[Finding]:
+        found: List[Finding] = []
+
+        def on_stmt(stmt: ast.stmt, tainted: Set[str]) -> None:
+            for expr in _stmt_exprs(stmt):
+                for call in ast.walk(expr):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    msg = self._violation(call, tainted, np_aliases)
+                    if msg:
+                        found.append(self.finding(
+                            src, call,
+                            f"{msg} in jit-reachable `{fn.name}`",
+                            fixit=("keep the value traced (jnp ops / "
+                                   "lax.cond) or hoist the sync into host "
+                                   "code outside the jitted region")))
+
+        walk_statements(fn, param_taint(fn), on_stmt)
+        yield from found
+
+    def _violation(self, call: ast.Call, tainted: Set[str],
+                   np_aliases: Set[str]) -> Optional[str]:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in self._CASTS:
+            if any(is_tainted(a, tainted) for a in call.args):
+                return (f"`{f.id}()` forces a device sync on traced value "
+                        f"`{ast.unparse(call.args[0])}`")
+        if isinstance(f, ast.Attribute) and f.attr in self._ATTRS and \
+                is_tainted(f.value, tainted):
+            return (f"`.{f.attr}()` forces a device sync on traced value "
+                    f"`{ast.unparse(f.value)}`")
+        name = dotted(f) or ""
+        parts = name.split(".")
+        if len(parts) == 2 and parts[0] in np_aliases and \
+                parts[1] in self._NP_FNS:
+            if any(is_tainted(a, tainted) for a in call.args):
+                return (f"`{name}()` materializes traced value "
+                        f"`{ast.unparse(call.args[0])}` on host")
+        if name == "jax.device_get" and \
+                any(is_tainted(a, tainted) for a in call.args):
+            return "`jax.device_get` on a traced value"
+        return None
+
+
+# ==========================================================================
+# R002 — jit static-arg hygiene
+# ==========================================================================
+def _last_name(fname: str) -> str:
+    return fname.split(".")[-1].lower()
+
+
+def _has_reduction(node: ast.AST) -> bool:
+    """Does the subtree read a scalar out of runtime data (``x.max()``,
+    ``np.max(x)``) — the signature of a per-tick-varying python int?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            fname = dotted(n.func) or ""
+            if isinstance(n.func, ast.Attribute) and \
+                    n.func.attr in ("max", "min", "sum", "argmax", "item"):
+                return True
+            if "." in fname and _last_name(fname) in ("max", "min", "sum"):
+                return True
+    return False
+
+
+def _raw_runtime_ints(expr: ast.AST) -> Iterator[ast.Call]:
+    """``int(<reduction>)`` calls not already inside a ``*bucket*`` call."""
+
+    def rec(node: ast.AST, bucketed: bool) -> Iterator[ast.Call]:
+        if isinstance(node, ast.Call):
+            fname = dotted(node.func) or ""
+            if "bucket" in _last_name(fname):
+                bucketed = True
+            if not bucketed and isinstance(node.func, ast.Name) and \
+                    node.func.id == "int" and \
+                    any(_has_reduction(a) for a in node.args):
+                yield node
+        for child in ast.iter_child_nodes(node):
+            yield from rec(child, bucketed)
+
+    yield from rec(expr, False)
+
+
+class StaticArgHygieneRule(Rule):
+    """Two jit-recompilation hazards:
+
+    (a) a locally-resolvable jitted function whose parameter is annotated
+        with a python type (``int``/``bool``/``str`` or a ``*Config``
+        dataclass) but is not declared in ``static_argnums``/
+        ``static_argnames`` — configs fail hashing at trace time, python
+        scalars silently retrace per value;
+    (b) a per-tick-varying python int (``int(x.max())`` and friends) that
+        feeds a static argument of a jitted callable or an array *shape*
+        without passing through a ``*bucket*`` function — the unbounded-
+        recompile class of the scheduler's ``t_step``/``live_width``
+        plumbing (one compile per distinct runtime value instead of
+        O(log) pow-2 buckets)."""
+
+    id = "R002"
+    title = "jit static-arg hygiene"
+    contract = ("python-typed jit params must be static, and runtime-"
+                "varying static args / shapes must be pow-2 bucketed")
+
+    _STATIC_ANN_RE = re.compile(r"\b(int|bool|str)\b|Config\b")
+    _SHAPE_CTORS = {"zeros", "ones", "full", "empty"}
+
+    def check(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        graph = ctx.graph
+        sites = graph.sites_in(src.module)
+        yield from self._check_undeclared_static(src, graph, sites)
+        yield from self._check_unbucketed(src, sites)
+
+    # -- (a) -------------------------------------------------------------
+    def _check_undeclared_static(self, src, graph, sites) -> Iterator[Finding]:
+        for site in sites:
+            info = graph.function(site.fn_key) if site.fn_key else None
+            if info is None or info.module != src.module or \
+                    not isinstance(info.node,
+                                   (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            fn = info.node
+            pos_args = list(fn.args.posonlyargs) + list(fn.args.args)
+            for i, arg in enumerate(pos_args):
+                if arg.arg in ("self", "cls") or arg.annotation is None:
+                    continue
+                ann = ast.unparse(arg.annotation)
+                if "Array" in ann or not self._STATIC_ANN_RE.search(ann):
+                    continue
+                if i in site.static_argnums or \
+                        arg.arg in site.static_argnames:
+                    continue
+                anchor = site.call if site.call is not None else fn
+                yield self.finding(
+                    src, anchor,
+                    f"jit of `{fn.name}`: param `{arg.arg}: {ann}` is a "
+                    f"python value but is not declared static",
+                    fixit=(f"add static_argnums={i} (or static_argnames="
+                           f"'{arg.arg}') to the jax.jit call"))
+
+    # -- (b) -------------------------------------------------------------
+    def _check_unbucketed(self, src, sites) -> Iterator[Finding]:
+        bound: Dict[str, object] = {
+            s.bound_to: s for s in sites
+            if s.bound_to and (s.static_argnums or s.static_argnames)}
+        for fn in iter_functions(src.tree):
+            yield from self._check_fn(src, fn, bound)
+
+    def _check_fn(self, src, fn: ast.FunctionDef, bound) -> Iterator[Finding]:
+        raw_names: Dict[str, ast.stmt] = {}
+        reported: Set[int] = set()
+
+        def names_in(node: ast.AST) -> Set[str]:
+            return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+        def raw_in(node: ast.AST) -> Optional[ast.stmt]:
+            """The statement to blame if ``node`` carries a raw runtime
+            int: the direct expression, or the assignment that produced a
+            name used inside it."""
+            for c in _raw_runtime_ints(node):
+                return c
+            for name in names_in(node) & raw_names.keys():
+                return raw_names[name]
+            return None
+
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and stmt.value is not None:
+                if any(True for _ in _raw_runtime_ints(stmt.value)):
+                    for name in _assign_targets(stmt):
+                        raw_names[name] = stmt
+            if not isinstance(stmt, (ast.Assign, ast.Expr, ast.Return,
+                                     ast.AugAssign)):
+                continue
+            value = getattr(stmt, "value", None)
+            if value is None:
+                continue
+            for call in ast.walk(value):
+                if not isinstance(call, ast.Call):
+                    continue
+                fname = dotted(call.func) or ""
+                # shape construction: np/jnp.{zeros,ones,full,empty}
+                if "." in fname and \
+                        _last_name(fname) in self._SHAPE_CTORS and call.args:
+                    blame = raw_in(call.args[0])
+                    if blame is not None and id(blame) not in reported:
+                        reported.add(id(blame))
+                        yield self.finding(
+                            src, blame,
+                            "runtime-varying int feeds an array shape "
+                            f"(`{ast.unparse(call)[:60]}`) without "
+                            "bucketing — one jit specialization per "
+                            "distinct value",
+                            fixit="round it up through a pow-2 bucketing "
+                                  "helper (e.g. `_bucket(...)`) so at most "
+                                  "O(log n) shapes exist")
+                # static-arg positions of a known jitted wrapper
+                site = bound.get(fname)
+                if site is not None:
+                    for i in site.static_argnums:
+                        if i < len(call.args):
+                            blame = raw_in(call.args[i])
+                            if blame is not None and id(blame) not in reported:
+                                reported.add(id(blame))
+                                yield self.finding(
+                                    src, blame,
+                                    f"runtime-varying int feeds static arg "
+                                    f"{i} of jitted `{fname}` without "
+                                    "bucketing — one compile per distinct "
+                                    "value",
+                                    fixit="pass the value through a pow-2 "
+                                          "bucketing helper before the "
+                                          "static position")
+
+
+# ==========================================================================
+# R003 — masked-scatter contract on cache writes
+# ==========================================================================
+class MaskedScatterRule(Rule):
+    """In ``models/``/``serving/``, any ``.at[...].set(...)`` /
+    ``.add(...)`` into a KV cache or block pool must follow the
+    masked-scatter convention: indices routed through ``jnp.where`` (dead
+    rows / padding tokens redirected out of bounds) and ``mode="drop"`` on
+    the write. Without both, a dead or stalled row's cache is clobbered —
+    the exact class of bug the per-row decode engine was built to avoid
+    (see ``model_apply``'s contract docstring)."""
+
+    id = "R003"
+    title = "masked-scatter cache-write contract"
+    contract = ("cache/pool scatter writes must mask dead rows: "
+                "jnp.where-guarded indices + mode='drop'")
+
+    _CACHEISH_RE = re.compile(r"cache|pool|\bkv\b", re.IGNORECASE)
+
+    def check(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        if not src.module.startswith(("repro.models", "repro.serving")) and \
+                "/models/" not in src.path and "/serving/" not in src.path:
+            return
+        for fn in iter_functions(src.tree):
+            guarded = self._where_assigned(fn)
+            for call in ast.walk(fn):
+                f = self._scatter_write(call)
+                if f is None:
+                    continue
+                base, idx = f
+                if not self._CACHEISH_RE.search(ast.unparse(base)):
+                    continue
+                mode = next((k.value for k in call.keywords
+                             if k.arg == "mode"), None)
+                has_drop = isinstance(mode, ast.Constant) and \
+                    mode.value == "drop"
+                has_guard = self._index_guarded(idx, guarded)
+                if has_drop and has_guard:
+                    continue
+                missing = []
+                if not has_guard:
+                    missing.append("indices are not routed through a "
+                                   "jnp.where mask")
+                if not has_drop:
+                    missing.append('mode="drop" is missing')
+                yield self.finding(
+                    src, call,
+                    f"unguarded cache write `{ast.unparse(base)[:40]}"
+                    f".at[...].{call.func.attr}`: " + " and ".join(missing),
+                    fixit=('redirect dead entries out of bounds — idx = '
+                           'jnp.where(active, idx, OOB) — and write with '
+                           '.at[idx].set(v, mode="drop")'))
+
+    @staticmethod
+    def _scatter_write(node: ast.AST):
+        """Match ``BASE.at[IDX].set/add(...)``; return (BASE, IDX)."""
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr in ("set", "add")):
+            return None
+        sub = node.func.value
+        if not (isinstance(sub, ast.Subscript) and
+                isinstance(sub.value, ast.Attribute) and
+                sub.value.attr == "at"):
+            return None
+        return sub.value.value, sub.slice
+
+    @staticmethod
+    def _where_assigned(fn: ast.FunctionDef) -> Set[str]:
+        names: Set[str] = set()
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and \
+                    isinstance(stmt.value, ast.Call):
+                fname = dotted(stmt.value.func) or ""
+                if _last_name(fname) == "where":
+                    names.update(_assign_targets(stmt))
+        return names
+
+    @staticmethod
+    def _index_guarded(idx: ast.AST, guarded: Set[str]) -> bool:
+        for n in ast.walk(idx):
+            if isinstance(n, ast.Name) and n.id in guarded:
+                return True
+            if isinstance(n, ast.Call) and \
+                    _last_name(dotted(n.func) or "") == "where":
+                return True
+        return False
+
+
+# ==========================================================================
+# R004 — PRNG key discipline
+# ==========================================================================
+class PrngReuseRule(Rule):
+    """A PRNG key consumed by two ``jax.random.*`` draws without an
+    interleaving ``split``/``fold_in`` produces *correlated* samples — the
+    serving stack's slot/batch/backend-invariant sampling depends on every
+    draw being keyed exactly once (``fold_in(request_key, position)``).
+    Also flags a draw inside a loop whose body never re-derives the key:
+    every iteration would sample the same stream."""
+
+    id = "R004"
+    title = "PRNG key reuse"
+    contract = ("a key feeds exactly one jax.random draw; derive fresh "
+                "keys with split/fold_in (position-keyed in serving)")
+
+    _DRAWS = {"normal", "uniform", "categorical", "bernoulli", "randint",
+              "truncated_normal", "gumbel", "permutation", "choice",
+              "exponential", "laplace", "gamma", "beta", "poisson",
+              "dirichlet", "bits", "ball", "rademacher"}
+    _DERIVE = {"split", "fold_in", "PRNGKey", "key", "clone"}
+
+    def check(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        for fn in iter_functions(src.tree):
+            yield from self._check_fn(src, fn)
+
+    def _is_draw(self, call: ast.Call) -> bool:
+        fname = dotted(call.func) or ""
+        parts = fname.split(".")
+        return len(parts) >= 2 and parts[-2] == "random" and \
+            parts[-1] in self._DRAWS
+
+    def _is_derive(self, node: ast.AST) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call) and \
+                    _last_name(dotted(n.func) or "") in self._DERIVE:
+                return True
+        return False
+
+    def _check_fn(self, src: SourceFile,
+                  fn: ast.FunctionDef) -> Iterator[Finding]:
+        draws: List[Tuple[int, str, ast.Call]] = []
+        rebinds: Dict[str, List[int]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue
+            if isinstance(node, ast.Call) and self._is_draw(node) and \
+                    node.args and isinstance(node.args[0], ast.Name):
+                draws.append((node.lineno, node.args[0].id, node))
+            if isinstance(node, ast.Assign) and node.value is not None and \
+                    self._is_derive(node.value):
+                for name in _assign_targets(node):
+                    rebinds.setdefault(name, []).append(node.lineno)
+
+        # straight-line double consumption
+        draws.sort()
+        last_use: Dict[str, int] = {}
+        for line, name, node in draws:
+            prev = last_use.get(name)
+            if prev is not None and not any(
+                    prev < ln <= line for ln in rebinds.get(name, [])):
+                yield self.finding(
+                    src, node,
+                    f"key `{name}` already consumed by a jax.random draw "
+                    f"at line {prev} and reused without split/fold_in — "
+                    "the two draws are correlated",
+                    fixit=f"derive a fresh key first: `{name}, sub = "
+                          f"jax.random.split({name})` (or fold_in a "
+                          "position for serving-invariant sampling)")
+            last_use[name] = line
+
+        # draw inside a loop with no per-iteration derivation
+        for loop in ast.walk(fn):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            lo, hi = loop.lineno, loop.end_lineno or loop.lineno
+            loop_targets = set()
+            if isinstance(loop, ast.For):
+                loop_targets = {n.id for n in ast.walk(loop.target)
+                                if isinstance(n, ast.Name)}
+            for line, name, node in draws:
+                if not (lo <= line <= hi) or name in loop_targets:
+                    continue
+                if not any(lo <= ln <= hi for ln in rebinds.get(name, [])):
+                    yield self.finding(
+                        src, node,
+                        f"key `{name}` is drawn from inside a loop but "
+                        "never re-derived per iteration — every iteration "
+                        "samples the same stream",
+                        fixit=f"fold the loop index in: `k = jax.random."
+                              f"fold_in({name}, i)` before the draw")
+
+
+# ==========================================================================
+# R005 — Pallas kernel rules
+# ==========================================================================
+class PallasKernelRule(Rule):
+    """Two Pallas-specific hazards in ``kernels/``:
+
+    (a) a ``BlockSpec`` ``index_map`` that closes over a traced value —
+        index maps run at *grid-planning* time on python/SMEM values; a
+        captured tracer either fails lowering or silently constant-folds
+        a stale value into the DMA addressing (the block-table kernels
+        must route runtime tables through scalar prefetch instead);
+    (b) a ref indexed with a python-dynamic slice (``ref[a:b]`` with
+        non-constant bounds) — Mosaic needs static slice extents; dynamic
+        offsets must go through ``pl.ds``/``pl.dynamic_slice``."""
+
+    id = "R005"
+    title = "Pallas index_map / ref-indexing rules"
+    contract = ("index_map closures capture only shape-derived python "
+                "values; refs are sliced statically or via pl.ds")
+
+    def check(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        walker = ctx.graph.walkers.get(src.module)
+        imports_pallas = walker is not None and any(
+            "pallas" in m for m in list(walker.mod_alias.values()) +
+            [s.split(":")[0] for s in walker.sym_alias.values()])
+        if not imports_pallas and "/kernels/" not in src.path:
+            return
+        for fn in iter_functions(src.tree):
+            yield from self._check_index_maps(src, fn)
+            yield from self._check_ref_slices(src, fn)
+
+    # -- (a) index_map purity -------------------------------------------
+    def _check_index_maps(self, src: SourceFile,
+                          fn: ast.FunctionDef) -> Iterator[Finding]:
+        specs = [c for c in ast.walk(fn)
+                 if isinstance(c, ast.Call) and
+                 (dotted(c.func) or "").endswith("BlockSpec")]
+        if not specs:
+            return
+        # taint at function scope: array-ish params flowing through
+        # assignments; .shape access kills taint
+        tainted = param_taint(fn)
+        walk_statements(fn, tainted, lambda s, t: None)
+        local_defs = {f.name: f for f in ast.walk(fn)
+                      if isinstance(f, ast.FunctionDef)}
+        for spec in specs:
+            imap = None
+            if len(spec.args) >= 2:
+                imap = spec.args[1]
+            for k in spec.keywords:
+                if k.arg == "index_map":
+                    imap = k.value
+            if imap is None:
+                continue
+            if isinstance(imap, ast.Name) and imap.id in local_defs:
+                target = local_defs[imap.id]
+                own = {a.arg for a in _all_args(target)}
+                body = target
+            elif isinstance(imap, ast.Lambda):
+                own = {a.arg for a in _all_args(imap)}
+                body = imap.body
+            else:
+                continue
+            for n in ast.walk(body):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                        and n.id not in own and n.id in tainted:
+                    yield self.finding(
+                        src, spec,
+                        f"BlockSpec index_map closes over `{n.id}`, which "
+                        "flows from a traced array — index maps must only "
+                        "capture shape-derived python values",
+                        fixit="pass runtime tables via scalar prefetch "
+                              "(PrefetchScalarGridSpec) and read them as "
+                              "index_map ref arguments instead")
+                    break
+
+    # -- (b) python-dynamic ref slices ----------------------------------
+    def _check_ref_slices(self, src: SourceFile,
+                          fn: ast.FunctionDef) -> Iterator[Finding]:
+        if not any(a.arg.endswith(("_ref", "_scr"))
+                   for a in _all_args(fn)):
+            return
+        for sub in ast.walk(fn):
+            if not (isinstance(sub, ast.Subscript) and
+                    isinstance(sub.value, ast.Name) and
+                    sub.value.id.endswith(("_ref", "_scr"))):
+                continue
+            elts = sub.slice.elts if isinstance(sub.slice, ast.Tuple) \
+                else [sub.slice]
+            for e in elts:
+                if isinstance(e, ast.Slice) and not (
+                        self._static_bound(e.lower) and
+                        self._static_bound(e.upper)):
+                    yield self.finding(
+                        src, sub,
+                        f"ref `{sub.value.id}` sliced with python-dynamic "
+                        f"bounds `{ast.unparse(e)}` — Mosaic needs static "
+                        "slice extents",
+                        fixit="use pl.ds(start, static_size) / "
+                              "pl.dynamic_slice for dynamic offsets")
+
+    @staticmethod
+    def _static_bound(node: Optional[ast.AST]) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.UnaryOp) and \
+                isinstance(node.operand, ast.Constant):
+            return True
+        return False
+
+
+ALL_RULES = [HostSyncRule, StaticArgHygieneRule, MaskedScatterRule,
+             PrngReuseRule, PallasKernelRule]

@@ -157,11 +157,13 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig,
         am = jax.sharding.get_abstract_mesh()
         if am is not None and am.axis_names:
             total = 1
-            for n in am.axis_names:
-                total *= am.shape[n]
+            for ax in am.axis_names:
+                total *= am.shape[ax]
             if n_groups % max(total, 1) == 0 and total > 1:
                 group_axes = ("dp", "tp")
-    except Exception:  # noqa: BLE001
+    except (AttributeError, KeyError, TypeError):
+        # older jax without get_abstract_mesh / mesh objects missing
+        # axis_names or shape lookups — fall back to dp-only grouping
         pass
 
     xg = maybe_constrain(x2d.reshape(n_groups, gsz, d), group_axes, None, None)
@@ -217,7 +219,8 @@ def _moe_dispatch(p: Params, x2d: Array, top_p, top_i, cfg: MoEConfig,
             wanted = ("pod", "data", "model") if "tp" in group_axes else ("pod", "data")
             got = tuple(a for a in wanted if a in am.axis_names)
             spmd_axes = got if got else None
-    except Exception:  # noqa: BLE001
+    except (AttributeError, KeyError, TypeError):
+        # same probe as above: no abstract-mesh API -> unsharded vmap
         spmd_axes = None
     vm = jax.vmap(per_group, spmd_axis_name=spmd_axes) if spmd_axes else jax.vmap(per_group)
     y = vm(xg, pg, ig, mg)

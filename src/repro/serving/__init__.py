@@ -1,5 +1,6 @@
 from repro.serving.decode import (
     GenerateConfig,
+    chunked_prefill,
     decode_one,
     generate,
     prefill,
@@ -9,8 +10,9 @@ from repro.serving.decode import (
     step_rows,
 )
 
-__all__ = ["GenerateConfig", "decode_one", "generate", "prefill",
-           "sample_logits", "sample_rows", "sample_token_at", "step_rows"]
+__all__ = ["GenerateConfig", "chunked_prefill", "decode_one", "generate",
+           "prefill", "sample_logits", "sample_rows", "sample_token_at",
+           "step_rows"]
 from repro.serving.scheduler import (  # noqa: E402
     BlockAllocator,
     ContinuousBatcher,

@@ -103,6 +103,40 @@ def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
     return logits[:, -1, :], aux["cache"], t
 
 
+def _ring_chunk_cap(cfg: ModelConfig, max_len: int) -> Optional[int]:
+    """Largest prefill chunk a ``local_attn`` ring admits (the batcher's
+    ``ring_cap``): a chunk must fit the ring and its own writes must not
+    collide inside it. None when no layer uses a ring cache."""
+    kinds = tuple(cfg.pattern) + tuple(cfg.tail_pattern)
+    if any(k == "local_attn" for k in kinds) and cfg.window:
+        return min(max_len, cfg.window)
+    return None
+
+
+def chunked_prefill(params, cfg: ModelConfig, tokens: Array, max_len: int,
+                    chunk: Optional[int] = None):
+    """Stream the prompt through ``step_rows`` in uniform chunks — the
+    batcher's chunked-prefill contract (per-row pos vectors + per-token
+    active masks), usable standalone. Unlike one-shot ``prefill`` this
+    works for ``local_attn`` prompts longer than the window: each chunk is
+    capped at the ring so the pre-write ring read path sees a consistent
+    window (see ``model_apply``).
+
+    Returns (last_logits (B, vocab), cache, prompt_len)."""
+    b, t = tokens.shape
+    cap = _ring_chunk_cap(cfg, max_len)
+    step = min(x for x in (chunk, cap, t) if x is not None and x > 0)
+    cache = init_cache(cfg, b, max_len)
+    last = None
+    for off in range(0, t, step):
+        c = min(step, t - off)
+        pos = jnp.full((b,), off, jnp.int32)
+        counts = jnp.full((b,), c, jnp.int32)
+        last, cache = step_rows(params, cfg, cache,
+                                tokens[:, off:off + c], pos, counts)
+    return last, cache, t
+
+
 def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos,
                active: Optional[Array] = None):
     """One decode step. ``pos`` is a shared scalar or per-row (B,) vector;
@@ -183,13 +217,24 @@ def _decode_loop(params, cfg: ModelConfig, cache, last_logits,
 
 
 def generate(params, cfg: ModelConfig, prompt: Array, gen: GenerateConfig,
-             key: Optional[Array] = None) -> Array:
+             key: Optional[Array] = None,
+             prefill_chunk: Optional[int] = None) -> Array:
     """Greedy/temperature/top-k sampling. prompt: (B, T) int32. Returns
     (B, T + max_new_tokens); rows that emit ``gen.eos_id`` keep it and are
-    padded with ``gen.pad_id`` afterwards."""
+    padded with ``gen.pad_id`` afterwards.
+
+    Prompts that overflow a ``local_attn`` ring (T > window) are prefilled
+    through the batcher's chunked path automatically; ``prefill_chunk``
+    forces chunked prefill with the given chunk size (it is still capped
+    at the ring)."""
     t = prompt.shape[1]
     max_len = t + gen.max_new_tokens
-    last_logits, cache, pos = prefill(params, cfg, prompt, max_len)
+    cap = _ring_chunk_cap(cfg, max_len)
+    if prefill_chunk is None and (cap is None or t <= cap):
+        last_logits, cache, pos = prefill(params, cfg, prompt, max_len)
+    else:
+        last_logits, cache, pos = chunked_prefill(
+            params, cfg, prompt, max_len, chunk=prefill_chunk)
     key = key if key is not None else jax.random.PRNGKey(0)
     new_tokens, _ = _decode_loop(params, cfg, cache, last_logits, gen, pos, key)
     return jnp.concatenate([prompt, new_tokens], axis=1)

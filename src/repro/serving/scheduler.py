@@ -530,6 +530,7 @@ class ContinuousBatcher:
         # (no per-token write index to mask), so uniform mode uses the
         # exact chunk length — one compile per distinct prompt-chunk size,
         # the same specialization behavior as a one-shot prefill engine
+        # repro: ignore[R002] uniform recurrent rows need the exact chunk length
         t_step = int(counts.max()) if self._uniform \
             else _bucket(int(counts.max()))
         tokens = np.zeros((self.B, t_step), np.int32)

@@ -1,0 +1,415 @@
+"""Contract linter (repro.analysis): per-rule true-positive + clean
+fixtures, the call-graph scoping that keeps host-side code exempt,
+suppression semantics (reasoned / reasonless), reporters and CLI exits.
+
+Every fixture is linted in-memory via ``run_lint`` on (path, text) pairs;
+paths are chosen to exercise the path-scoped rules (R003 only fires under
+models//serving/, R005 under kernels/ or pallas importers).
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import run_lint
+from repro.analysis.engine import render_json, render_text
+from repro.analysis.lint import main as lint_main
+
+
+def lint(*sources):
+    """sources: (path, code) pairs; returns the findings list."""
+    findings, _ = run_lint(
+        [(p, textwrap.dedent(code)) for p, code in sources])
+    return findings
+
+
+def active(findings, rule=None):
+    return [f for f in findings if not f.suppressed
+            and (rule is None or f.rule == rule)]
+
+
+class TestR001HostSync:
+    def test_true_positive_in_jitted_fn(self):
+        fs = lint(("m.py", """
+            import jax
+
+            @jax.jit
+            def step(x):
+                return int(x.max())
+        """))
+        (f,) = active(fs, "R001")
+        assert "int()" in f.message and "step" in f.message
+
+    def test_true_positive_through_call_graph(self):
+        """helper is only reachable via the jitted caller."""
+        fs = lint(("m.py", """
+            import jax
+
+            def helper(v):
+                return v.item()
+
+            @jax.jit
+            def outer(a):
+                return helper(a)
+        """))
+        (f,) = active(fs, "R001")
+        assert ".item()" in f.message and "helper" in f.message
+
+    def test_clean_host_side_code(self):
+        """The scheduler idiom: host code syncing AFTER a jitted call is
+        fine — it is not jit-reachable."""
+        fs = lint(("m.py", """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def step(x):
+                return x * 2
+
+            def drive(x):
+                y = step(x)
+                return int(y.max()), np.asarray(y)
+        """))
+        assert not active(fs, "R001")
+
+    def test_clean_shape_access_kills_taint(self):
+        """b, t = tokens.shape is static under tracing; int(t) is fine."""
+        fs = lint(("m.py", """
+            import jax
+
+            @jax.jit
+            def step(tokens):
+                b, t = tokens.shape
+                return tokens.reshape(int(b * t))
+        """))
+        assert not active(fs, "R001")
+
+    def test_clean_annotated_python_params(self):
+        """int/Config-annotated params are host values, not tracers."""
+        fs = lint(("m.py", """
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, static_argnums=(1, 2))
+            def step(x, width: int, cfg: ModelConfig):
+                return x * int(width) * float(cfg.scale)
+        """))
+        assert not active(fs, "R001")
+
+
+class TestR002StaticArgs:
+    def test_true_positive_undeclared_static(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def f(x, width: int):
+                return x * width
+
+            step = jax.jit(f)
+        """))
+        (f,) = active(fs, "R002")
+        assert "width" in f.message and "not declared static" in f.message
+
+    def test_true_positive_unbucketed_shape(self):
+        fs = lint(("m.py", """
+            import numpy as np
+
+            def tick(counts):
+                t = int(counts.max())
+                return np.zeros((4, t), np.int32)
+        """))
+        (f,) = active(fs, "R002")
+        assert "shape" in f.message and "bucketing" in f.message
+
+    def test_true_positive_unbucketed_static_arg(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def f(x, n):
+                return x[:n]
+
+            step = jax.jit(f, static_argnums=(1,))
+
+            def tick(x, counts):
+                return step(x, int(counts.max()))
+        """))
+        (f,) = active(fs, "R002")
+        assert "static arg 1" in f.message
+
+    def test_clean_bucketed(self):
+        """The scheduler's real pattern: _bucket() wrapping makes both the
+        shape use and the static-arg use bounded."""
+        fs = lint(("m.py", """
+            import jax
+            import numpy as np
+
+            def _bucket(n):
+                return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+            def f(x, n):
+                return x[:n]
+
+            step = jax.jit(f, static_argnums=(1,))
+
+            def tick(x, counts):
+                t = _bucket(int(counts.max()))
+                buf = np.zeros((4, t), np.int32)
+                return step(x, t)
+        """))
+        assert not active(fs, "R002")
+
+    def test_clean_declared_statics(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def f(x, width: int, causal: bool):
+                return x * width
+
+            step = jax.jit(f, static_argnums=(1, 2))
+        """))
+        assert not active(fs, "R002")
+
+
+class TestR003MaskedScatter:
+    def test_true_positive_unguarded_cache_write(self):
+        fs = lint(("src/repro/serving/s.py", """
+            def write(cache, idx, v):
+                cache["k"] = cache["k"].at[idx].set(v)
+                return cache
+        """))
+        (f,) = active(fs, "R003")
+        assert "jnp.where" in f.message and 'mode="drop"' in f.message
+
+    def test_true_positive_guard_without_drop(self):
+        fs = lint(("src/repro/models/m.py", """
+            import jax.numpy as jnp
+
+            def write(cache, idx, v, act):
+                idx = jnp.where(act, idx, -1)
+                cache["k"] = cache["k"].at[idx].set(v)
+                return cache
+        """))
+        (f,) = active(fs, "R003")
+        assert 'mode="drop" is missing' in f.message
+        assert "jnp.where" not in f.message.split(":")[1].split(" and ")[0]
+
+    def test_clean_masked_write(self):
+        """The model_apply contract verbatim."""
+        fs = lint(("src/repro/models/m.py", """
+            import jax.numpy as jnp
+
+            def write(cache, widx, v, act):
+                widx = jnp.where(act, widx, 4096)
+                cache["k"] = cache["k"].at[:, widx].set(v, mode="drop")
+                return cache
+        """))
+        assert not active(fs, "R003")
+
+    def test_out_of_scope_paths_exempt(self):
+        """Same write outside models//serving/ (e.g. an optimizer state
+        pool in train/) is not this contract."""
+        fs = lint(("src/repro/train/t.py", """
+            def write(pool_cache, idx, v):
+                pool_cache = pool_cache.at[idx].set(v)
+                return pool_cache
+        """))
+        assert not active(fs, "R003")
+
+
+class TestR004Prng:
+    def test_true_positive_double_draw(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def sample(key, shape):
+                a = jax.random.normal(key, shape)
+                b = jax.random.uniform(key, shape)
+                return a + b
+        """))
+        (f,) = active(fs, "R004")
+        assert "reused without split/fold_in" in f.message
+
+    def test_true_positive_loop_reuse(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def sample(key, xs):
+                out = []
+                for x in xs:
+                    out.append(jax.random.normal(key, x.shape))
+                return out
+        """))
+        (f,) = active(fs, "R004")
+        assert "loop" in f.message
+
+    def test_clean_split_between_draws(self):
+        fs = lint(("m.py", """
+            import jax
+
+            def sample(key, shape):
+                a = jax.random.normal(key, shape)
+                key, sub = jax.random.split(key)
+                b = jax.random.uniform(sub, shape)
+                return a + b
+        """))
+        assert not active(fs, "R004")
+
+    def test_clean_fold_in_loop(self):
+        """The serving position-keyed idiom."""
+        fs = lint(("m.py", """
+            import jax
+
+            def sample(key, xs):
+                out = []
+                for i, x in enumerate(xs):
+                    k = jax.random.fold_in(key, i)
+                    out.append(jax.random.normal(k, x.shape))
+                return out
+        """))
+        assert not active(fs, "R004")
+
+
+class TestR005Pallas:
+    def test_true_positive_traced_index_map_capture(self):
+        fs = lint(("src/repro/kernels/k.py", """
+            import jax.experimental.pallas as pl
+            import jax.numpy as jnp
+
+            def launch(x, table):
+                t = table.astype(jnp.int32)
+                spec = pl.BlockSpec((8, 8), lambda i, j: (t[i], j))
+                return spec
+        """))
+        (f,) = active(fs, "R005")
+        assert "closes over `t`" in f.message
+        assert "scalar prefetch" in f.fixit
+
+    def test_true_positive_dynamic_ref_slice(self):
+        fs = lint(("src/repro/kernels/k.py", """
+            def kernel(x_ref, o_ref, n):
+                o_ref[0:n] = x_ref[0:n] * 2.0
+        """))
+        assert len(active(fs, "R005")) == 2  # both refs flagged
+
+    def test_clean_shape_derived_index_map(self):
+        """The paged-attention kernel's real shape: the closure captures
+        only values derived via .shape."""
+        fs = lint(("src/repro/kernels/k.py", """
+            import jax.experimental.pallas as pl
+
+            def launch(x, table):
+                nb = table.shape[1]
+
+                def kv_index(bi, wi):
+                    return (bi * nb + wi, 0)
+
+                spec = pl.BlockSpec((8, 8), kv_index)
+                return spec
+        """))
+        assert not active(fs, "R005")
+
+    def test_clean_static_and_pl_ds_indexing(self):
+        fs = lint(("src/repro/kernels/k.py", """
+            import jax.experimental.pallas as pl
+
+            def kernel(x_ref, o_ref, i):
+                o_ref[0:4] = x_ref[0:4]
+                o_ref[0, i, :] = x_ref[0, i, :]
+                x_ref[pl.ds(i * 8, 8)]
+        """))
+        assert not active(fs, "R005")
+
+
+class TestSuppressions:
+    SRC = """
+        import numpy as np
+
+        def tick(counts):
+            t = int(counts.max())  {comment}
+            return np.zeros((4, t), np.int32)
+    """
+
+    def test_reasoned_suppression_silences(self):
+        fs = lint(("m.py", self.SRC.format(
+            comment="# repro: ignore[R002] exact length required here")))
+        assert not active(fs)
+        (sup,) = [f for f in fs if f.suppressed]
+        assert sup.suppress_reason == "exact length required here"
+
+    def test_reasonless_suppression_rejected(self):
+        fs = lint(("m.py", self.SRC.format(comment="# repro: ignore[R002]")))
+        # original finding stays active AND an R000 flags the bare ignore
+        assert active(fs, "R002")
+        assert any(f.rule == "R000" and "no reason" in f.message
+                   for f in fs)
+
+    def test_wrong_rule_id_does_not_suppress(self):
+        fs = lint(("m.py", self.SRC.format(
+            comment="# repro: ignore[R001] not the firing rule")))
+        assert active(fs, "R002")
+
+    def test_suppression_on_preceding_line(self):
+        fs = lint(("m.py", """
+            import numpy as np
+
+            def tick(counts):
+                # repro: ignore[R002] exact length required here
+                t = int(counts.max())
+                return np.zeros((4, t), np.int32)
+        """))
+        assert not active(fs)
+
+
+class TestReportersAndCli:
+    BAD = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return int(x.max())
+    """
+
+    def test_json_reporter_shape(self):
+        fs = lint(("m.py", self.BAD))
+        doc = json.loads(render_json(fs))
+        assert doc["active"] == 1 and doc["suppressed"] == 0
+        (j,) = doc["findings"]
+        assert j["rule"] == "R001" and j["path"] == "m.py"
+        assert j["line"] >= 1 and j["fixit"]
+
+    def test_text_reporter_counts(self):
+        fs = lint(("m.py", self.BAD))
+        txt = render_text(fs)
+        assert "1 finding(s), 0 suppressed" in txt
+        assert "m.py:" in txt and "fix:" in txt
+
+    def test_syntax_error_is_finding_not_crash(self):
+        fs = lint(("m.py", "def broken(:\n"))
+        (f,) = active(fs, "R000")
+        assert "syntax error" in f.message
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent(self.BAD))
+        ok = tmp_path / "ok.py"
+        ok.write_text("x = 1\n")
+        assert lint_main([str(bad)]) == 1
+        assert lint_main([str(ok)]) == 0
+        assert lint_main([str(tmp_path / "missing.py")]) == 2
+        assert lint_main([str(bad), "--rules", "R999"]) == 2
+        assert lint_main([str(bad), "--format", "json"]) == 1
+        capsys.readouterr()
+
+    def test_repo_tree_is_clean(self):
+        """The acceptance gate CI enforces: src/ lints clean."""
+        assert lint_main(["src/"]) == 0
+
+
+class TestRuleCatalogue:
+    def test_five_rules_active_with_contracts(self):
+        from repro.analysis import ALL_RULES
+        ids = [r.id for r in ALL_RULES]
+        assert ids == ["R001", "R002", "R003", "R004", "R005"]
+        for cls in ALL_RULES:
+            r = cls()
+            assert r.title and r.contract

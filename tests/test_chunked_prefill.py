@@ -185,6 +185,57 @@ class TestLongRingPrompt:
         np.testing.assert_array_equal(b.run()[0].output, ref, err_msg=str(kw))
 
 
+class TestStandaloneChunkedGenerate:
+    """ROADMAP carryover: standalone ``generate`` routes long prompts
+    through the batcher's chunked-prefill contract (``step_rows`` with
+    uniform pos/count vectors), so a ``local_attn`` prompt longer than the
+    window works outside the engine — and produces exactly the engine's
+    tokens."""
+
+    def _ring_cfg(self):
+        return _tiny(pattern=("attn", "local_attn"), window=8,
+                     max_seq_len=64)
+
+    def test_long_local_prompt_matches_oracle(self):
+        """The seed's one-shot ring prefill could not admit 20 > window=8;
+        chunked generate must, and must match the cache-free oracle."""
+        cfg = self._ring_cfg()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(4, 60, size=20).astype(np.int32)
+        ref = _ref_free(params, cfg, prompt, 6)
+        out = generate(params, cfg, jnp.asarray(prompt)[None, :],
+                       GenerateConfig(max_new_tokens=6))
+        np.testing.assert_array_equal(np.asarray(out[0, 20:]), ref)
+
+    def test_matches_engine_bitwise(self):
+        """Same chunk boundaries as the engine (token_budget == window ==
+        ring cap -> chunks 8, 8, 4): generated ids must agree exactly."""
+        cfg = self._ring_cfg()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(12)
+        prompt = rng.integers(4, 60, size=20).astype(np.int32)
+        out = generate(params, cfg, jnp.asarray(prompt)[None, :],
+                       GenerateConfig(max_new_tokens=6))
+        b = ContinuousBatcher(params, cfg, batch_size=1, max_len=32,
+                              token_budget=8)
+        b.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+        engine = b.run()[0].output
+        np.testing.assert_array_equal(np.asarray(out[0, 20:]), engine)
+
+    def test_explicit_chunking_matches_oneshot(self):
+        """On a non-ring config chunked prefill is opt-in; forcing it must
+        not change the greedy continuation vs the one-shot path."""
+        cfg = _tiny()
+        params = model_init(KEY, cfg)
+        rng = np.random.default_rng(13)
+        prompt = jnp.asarray(rng.integers(4, 60, size=(2, 11)), jnp.int32)
+        gen = GenerateConfig(max_new_tokens=8)
+        ref = generate(params, cfg, prompt, gen)
+        chunked = generate(params, cfg, prompt, gen, prefill_chunk=4)
+        np.testing.assert_array_equal(np.asarray(chunked), np.asarray(ref))
+
+
 class TestMixedTick:
     """Acceptance: one forward pass carries >= 2 prefill chunks from
     different requests AND an actively decoding row, and every request

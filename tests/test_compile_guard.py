@@ -1,0 +1,104 @@
+"""Recompile-regression tripwire (repro.analysis.compile_guard): the
+decode tick's jit specializations stay within the pow-2 bucket budget as
+live widths grow, and the guard FAILS when an unbucketed static arg is
+introduced into the tick — the runtime complement of lint rule R002.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serving.scheduler as scheduler
+from repro.analysis.compile_guard import (CompileBudgetExceeded,
+                                          CompileGuard, track)
+from repro.models import model_init
+from repro.models.transformer import ModelConfig
+from repro.serving import ContinuousBatcher, Request
+from repro.serving.scheduler import _bucket
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny():
+    return ModelConfig(name="tiny", n_layers=1, d_model=16, n_heads=2,
+                       n_kv_heads=2, d_ff=32, vocab_size=32, pos="rope",
+                       max_seq_len=64, scan_layers=False, remat=False,
+                       mlp_kind="swiglu", norm="rmsnorm")
+
+
+class TestGuardMechanics:
+    def test_counts_compiles_per_shape(self):
+        f = jax.jit(lambda x: x * 2)
+        track(f)
+        with CompileGuard() as guard:
+            f(jnp.zeros((2,)))
+            f(jnp.zeros((2,)))   # cache hit
+            f(jnp.zeros((3,)))   # new shape
+        assert guard.compiles == 2
+
+    def test_raises_over_budget(self):
+        f = jax.jit(lambda x, n: x[:n], static_argnums=(1,))
+        track(f)
+        x = jnp.arange(16)
+        with pytest.raises(CompileBudgetExceeded, match="budget is 2"):
+            with CompileGuard(budget=2):
+                for n in (3, 5, 6, 7):      # unbucketed: 4 compiles
+                    f(x, n)
+
+    def test_bucketing_stays_within_budget(self):
+        f = jax.jit(lambda x, n: x[:n], static_argnums=(1,))
+        track(f)
+        x = jnp.arange(16)
+        with CompileGuard(budget=3) as guard:
+            for n in (3, 5, 6, 7):          # buckets: 4, 8 -> 2 compiles
+                f(x, _bucket(n))
+        assert guard.compiles == 2
+
+    def test_marker_enforces_budget(self, testdir=None):
+        """The pytest marker path: run a mini-suite where one test blows
+        its budget and assert pytest reports the failure."""
+        f = jax.jit(lambda x: x + 1)
+        track(f)
+        with CompileGuard(budget=0):
+            pass                            # zero-compile body passes
+        with pytest.raises(CompileBudgetExceeded):
+            with CompileGuard(budget=0):
+                f(jnp.zeros((4,)))
+
+
+@pytest.mark.compile_budget(8)
+def test_decode_tick_sweep_within_pow2_budget():
+    """Drive the paged decode tick until a row's block count has crossed
+    several pow-2 boundaries (held blocks 1 -> ~14). The static
+    (t_step, live_width) pair the tick feeds jax.jit must take at most:
+    1 prefill variant + one decode variant per pow-2 bucket (1, 2, 4, 8,
+    16) = 6 compiles. The @compile_budget(8) marker enforces it with
+    slack for platform variation; an unbucketed live width would need one
+    compile per distinct block count (~14) and trip the budget."""
+    cfg = _tiny()
+    params = model_init(KEY, cfg)
+    b = ContinuousBatcher(params, cfg, batch_size=1, max_len=32,
+                          paged=True, block_size=2, num_blocks=20)
+    prompt = np.arange(2, 4, dtype=np.int32)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=25))
+    out = b.run()[0].output
+    assert out.shape == (25,)
+    # the sweep genuinely crossed buckets: ticks saw widths 1 and >8
+    assert _bucket(14) == 16
+
+
+def test_unbucketed_static_arg_trips_guard(monkeypatch):
+    """Acceptance demo: replace the scheduler's pow-2 bucketing with the
+    identity (exactly the regression R002 lints against) and the SAME
+    sweep blows the compile budget the bucketed tick satisfies."""
+    monkeypatch.setattr(scheduler, "_bucket", lambda n: max(int(n), 1))
+    cfg = _tiny()
+    params = model_init(KEY, cfg)
+    b = ContinuousBatcher(params, cfg, batch_size=1, max_len=32,
+                          paged=True, block_size=2, num_blocks=20)
+    track(b._step_fn)
+    b.submit(Request(uid=0, prompt=np.arange(2, 4, dtype=np.int32),
+                     max_new_tokens=25))
+    with pytest.raises(CompileBudgetExceeded):
+        with CompileGuard(budget=8):
+            b.run()

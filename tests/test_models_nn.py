@@ -78,6 +78,56 @@ class TestMoE:
         y_both, _ = moe_apply(p, x, cfg)
         assert float(jnp.max(jnp.abs(y_both[0] - y_dense[0]))) > 1e-4
 
+    def test_mesh_probe_fallback_still_triggers(self, monkeypatch):
+        """The mesh probes in _moe_dispatch narrowed from `except
+        Exception` to (AttributeError, KeyError, TypeError): dispatch must
+        still fall back to unsharded execution when the abstract-mesh API
+        is missing (older jax), and must NOT swallow unrelated errors."""
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=4.0,
+                        group_size=32, exec_mode="dispatch")
+        p = moe_init(KEY, 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 40, 16))
+        y_base, _ = moe_apply(p, x, cfg)
+
+        def no_api():
+            raise AttributeError("module 'jax.sharding' has no attribute "
+                                 "'get_abstract_mesh'")
+
+        monkeypatch.setattr(jax.sharding, "get_abstract_mesh", no_api,
+                            raising=False)
+        y_fb, _ = moe_apply(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(y_fb), np.asarray(y_base),
+                                   atol=0)
+
+        def broken():
+            raise RuntimeError("not a mesh-probe failure")
+
+        monkeypatch.setattr(jax.sharding, "get_abstract_mesh", broken,
+                            raising=False)
+        with pytest.raises(RuntimeError, match="not a mesh-probe"):
+            moe_apply(p, x, cfg)
+
+    def test_mesh_probe_loop_keeps_token_count(self, monkeypatch):
+        """Regression: the probe's axis loop used to shadow the token
+        count `n` (`for n in am.axis_names`), corrupting the `y[:n]`
+        unpad slice whenever a mesh was active AND the group padded."""
+        import types
+        fake = types.SimpleNamespace(axis_names=("a", "b"),
+                                     shape={"a": 1, "b": 1})
+        monkeypatch.setattr(jax.sharding, "get_abstract_mesh",
+                            lambda: fake, raising=False)
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=4.0,
+                        group_size=32, exec_mode="dispatch")
+        p = moe_init(KEY, 16, cfg)
+        # 40 tokens, group 32 -> pad 24: the unpad slice must return 40
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 40, 16))
+        # real (trivial) mesh so the sharding constraints the probe's
+        # result triggers are legal on this single CPU device
+        devs = np.array(jax.devices()[:1]).reshape(1, 1)
+        with jax.sharding.Mesh(devs, ("a", "b")):
+            y, _ = moe_apply(p, x, cfg)
+        assert y.shape == (1, 40, 16)
+
     @given(seed=st.integers(0, 100))
     @settings(max_examples=10, deadline=None)
     def test_grad_flows(self, seed):
