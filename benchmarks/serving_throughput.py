@@ -37,6 +37,16 @@ Three sections:
      time-to-first-token stays in the same ballpark (chunks and decode
      share each forward). Reported per budget: max/median tick latency
      over the admission window and the long request's TTFT.
+  5. ``int8 vs fp serving`` — the W8A8 + int8-KV engine
+     (``qconfig=QConfig()``) against the fp engine on the same request
+     stream: tok/s, greedy token agreement %, and equal-byte-pool
+     capacity (peak concurrently advancing rows; the int8 pool holds
+     ~3.5x the blocks of an f32 pool — ``paged_kv_block_bytes``). A tiny
+     model is TRAINED on the synthetic chain first: random-init argmax is
+     a coin flip, so agreement is only meaningful once greedy margins are
+     decisive (see tests/test_int8_serving_quality.py); ``--smoke`` trains
+     just long enough to exercise the path, so its agreement column is
+     noisy by design.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
 Scale with REPRO_BENCH_STEPS (default 200 -> max_new_tokens 32).
@@ -223,6 +233,92 @@ def bench_prefill_interleave(cfg, params, long_len: int = 96,
     return rows
 
 
+def _train_tiny(method: str, steps: int, vocab: int = 64, seq: int = 32):
+    """Tiny 2-layer model trained on the synthetic Markov chain (decisive
+    greedy margins — the agreement metric's precondition)."""
+    import dataclasses
+
+    from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.step import TrainTask, init_train_state, make_train_step
+
+    cfg = opt_tiny(vocab=vocab, seq_len=seq)
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, n_heads=2,
+                              n_kv_heads=2, d_head=32, d_ff=256)
+    kw = {"alpha": 4.0} if method == "clipped_softmax" else {}
+    cfg = apply_method(cfg, method, **kw)
+    task = TrainTask(cfg=cfg, optimizer=AdamWConfig(lr=1e-3))
+    data = SyntheticLM(SyntheticLMConfig(vocab_size=vocab, seq_len=seq,
+                                         batch_size=32, seed=0, branching=8))
+    state = init_train_state(jax.random.PRNGKey(0), task)
+    step_fn = jax.jit(make_train_step(task), donate_argnums=(0,))
+    for i in range(steps):
+        state, _ = step_fn(state,
+                           jax.tree_util.tree_map(jnp.asarray, data.batch(i)))
+    return cfg, state.params, data
+
+
+def bench_int8_vs_fp() -> None:
+    from repro.models.transformer import paged_kv_block_bytes
+    from repro.quant import QConfig
+
+    steps = 40 if SMOKE else 400
+    methods = ["clipped_softmax"] if SMOKE \
+        else ["vanilla", "clipped_softmax", "gated_attention"]
+    print("method,engine,tok_s,agreement_pct")
+    cfg = params = None
+    for method in methods:
+        cfg, params, data = _train_tiny(method, steps)
+        prompts = [data.batch(999)["tokens"][i][:12].astype(np.int32)
+                   for i in range(6)]
+
+        def serve(qconfig):
+            b = ContinuousBatcher(params, cfg, batch_size=4, max_len=64,
+                                  paged=True, block_size=8, qconfig=qconfig)
+            outs, dt = {}, 0.0
+            for warm in (True, False):
+                for u, p in enumerate(prompts):
+                    b.submit(Request(uid=u, prompt=p.copy(),
+                                     max_new_tokens=MAX_NEW))
+                t0 = time.perf_counter()
+                done = b.run()
+                dt = time.perf_counter() - t0
+                outs = {r.uid: np.asarray(r.output) for r in done}
+                b.done.clear()
+            return outs, sum(len(o) for o in outs.values()) / dt
+
+        fp_out, fp_tok_s = serve(None)
+        q8_out, q8_tok_s = serve(QConfig())
+        pairs = [(x, y) for u in fp_out
+                 for x, y in zip(fp_out[u], q8_out[u])]
+        agree = 100.0 * sum(x == y for x, y in pairs) / max(len(pairs), 1)
+        print(f"{method},fp,{fp_tok_s:.1f},100.0")
+        print(f"{method},int8,{q8_tok_s:.1f},{agree:.1f}")
+
+    # equal-byte-pool capacity (last trained model; training is irrelevant
+    # to admission — only pool geometry matters)
+    bs = 8
+    budget = 12 * paged_kv_block_bytes(cfg, bs, kv_int8=False)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(4, cfg.vocab_size, 25).astype(np.int32)
+            for _ in range(8)]
+    print("\n# int8 vs fp KV pool, equal byte budget "
+          f"({budget} B/layer): peak concurrently-advancing rows")
+    print("kv_cache,num_blocks,peak_rows")
+    for kv_int8 in (False, True):
+        nb = budget // paged_kv_block_bytes(cfg, bs, kv_int8=kv_int8)
+        b = ContinuousBatcher(params, cfg, batch_size=8, max_len=32,
+                              paged=True, block_size=bs, num_blocks=nb,
+                              kv_int8=kv_int8)
+        for u, p in enumerate(reqs):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=2))
+        peak = 0
+        while b.queue or any(s.req is not None for s in b.slots):
+            b.step()
+            peak = max(peak, sum(1 for s in b.slots if s.blocks))
+        print(f"{'int8' if kv_int8 else 'fp'},{nb},{peak}")
+
+
 def main() -> None:
     print(f"decode throughput, max_new_tokens={MAX_NEW}, prompt={PROMPT_LEN}"
           + (" [--smoke]" if SMOKE else ""))
@@ -248,6 +344,10 @@ def main() -> None:
             cfg, params, long_len=32 if SMOKE else 96,
             budgets=(None, 16) if SMOKE else (None, 48, 16)):
         print(f"{label},{mx:.2f},{med:.2f},{ttft:.2f}")
+
+    print("\n# int8 vs fp serving (W8A8 tick + int8 paged KV; "
+          "trained tiny model — see module docstring)")
+    bench_int8_vs_fp()
 
 
 if __name__ == "__main__":

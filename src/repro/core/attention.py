@@ -288,6 +288,8 @@ def paged_attention_gather(
     q_offset=0,
     gate_pi: Optional[Array] = None,
     live_widths: Optional[Array] = None,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
 ) -> Array:
     """Gather-based attention over a paged KV cache. Returns (B, Tq, Hq, Dh).
 
@@ -311,7 +313,14 @@ def paged_attention_gather(
     so those entries are ``-1`` in real schedules and masking them is
     bitwise-neutral; the mask makes the row's valid work (and, with a
     sliced table, its gather) track the row rather than the widest row in
-    the tick."""
+    the tick.
+
+    ``k_scale``/``v_scale`` ((num_blocks, block_size) f32, optional): the
+    int8 pool's per-slot scale vectors. Dequantization is fused into the
+    same block gather — scales are gathered with the identical ``safe``
+    indices and multiplied back before the softmax, so the virtual KV
+    sequence the mask sees is already fp. Stale scales in recycled blocks
+    are hidden by the same validity/causal masks as stale KV."""
     b, w = block_table.shape
     nb, bs = k_pool.shape[0], k_pool.shape[1]
     tq, tk = q.shape[1], w * bs
@@ -322,6 +331,12 @@ def paged_attention_gather(
     safe = jnp.where(valid_entry, jnp.clip(block_table, 0, nb - 1), 0)
     k = k_pool[safe].reshape(b, tk, *k_pool.shape[2:])
     v = v_pool[safe].reshape(b, tk, *v_pool.shape[2:])
+    if k_scale is not None:
+        ks = k_scale[safe].reshape(b, tk)
+        k = k.astype(jnp.float32) * ks[:, :, None, None]
+    if v_scale is not None:
+        vs = v_scale[safe].reshape(b, tk)
+        v = v.astype(jnp.float32) * vs[:, :, None, None]
     valid = jnp.repeat(valid_entry, bs, axis=1)                  # (B, Tk)
     if live_widths is not None:
         # dead lanes are already masked out of the softmax below; zeroing
@@ -345,6 +360,8 @@ def paged_attention(
     *,
     live_width: Optional[int] = None,
     live_widths: Optional[Array] = None,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
     backend: str = "auto",
     interpret: Optional[bool] = None,
 ) -> Array:
@@ -386,6 +403,14 @@ def paged_attention(
     work inside them). The kernel backend ignores it: its per-block masks
     already skip unallocated entries, and a per-row ``pl.when`` early exit
     is on-TPU tuning work (ROADMAP).
+
+    ``k_scale``/``v_scale``: per-slot scale vectors (num_blocks,
+    block_size) of an int8 pool (``init_paged_cache(kv_int8=True)``).
+    Both backends fuse dequantization into their block reads: the gather
+    path gathers scales alongside blocks, the kernel DMAs each block's
+    scale vector through the same table-driven index_map and multiplies in
+    the epilogue of the block load. Scale arrays are pool-indexed, not
+    table-indexed, so ``live_width`` slicing leaves them untouched.
     """
     b, w_full = block_table.shape
     bs = k_pool.shape[1]
@@ -408,12 +433,14 @@ def paged_attention(
         return paged_mha(q, k_pool, v_pool, block_table, q_offset, gate_pi,
                          causal=cfg.causal, window=cfg.window,
                          softcap=cfg.logit_softcap, gamma=gamma, zeta=zeta,
+                         k_scale=k_scale, v_scale=v_scale,
                          interpret=interpret)
     if backend != "gather":
         raise ValueError(f"unknown paged-attention backend {backend!r}")
     return paged_attention_gather(q, k_pool, v_pool, block_table, cfg,
                                   q_offset=q_offset, gate_pi=gate_pi,
-                                  live_widths=live_widths)
+                                  live_widths=live_widths,
+                                  k_scale=k_scale, v_scale=v_scale)
 
 
 def attention(

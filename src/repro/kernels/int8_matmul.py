@@ -63,13 +63,20 @@ def int8_matmul(
     w_q: jax.Array,          # (K, N) int8 (symmetric)
     w_scale: jax.Array,      # scalar f32
     *,
+    x_scale: float = None,   # static PTQ-calibrated activation scale
+    x_zero: float = None,    # static activation zero-point (uint8 domain)
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 256,
     interpret: bool = True,
 ) -> jax.Array:
-    """Full W8A8 matmul: dynamic per-tensor asymmetric activation quant +
-    integer kernel + dequant. Returns f32 (M, N)."""
+    """Full W8A8 matmul: per-tensor asymmetric activation quant + integer
+    kernel + dequant. Returns f32 (M, N).
+
+    When ``x_scale``/``x_zero`` are given (PTQ-calibrated static ranges,
+    e.g. from QuantContext.act_qparams) the dynamic min/max pass over x is
+    skipped — the production serving configuration. Without them the range
+    is derived from this batch (dynamic quantization)."""
     m, kdim = x.shape
     n = w_q.shape[1]
     # activation quantization (asymmetric uint8, zero-point folded out)
@@ -77,10 +84,14 @@ def int8_matmul(
     block_n = min(block_n, n)
     block_k = min(block_k, kdim)
     x32 = x.astype(jnp.float32)
-    x_min = jnp.minimum(jnp.min(x32), 0.0)
-    x_max = jnp.maximum(jnp.max(x32), 0.0)
-    s_x = jnp.maximum((x_max - x_min) / 255.0, 1e-8)
-    z_x = jnp.clip(jnp.round(-x_min / s_x), 0, 255)
+    if x_scale is None:
+        x_min = jnp.minimum(jnp.min(x32), 0.0)
+        x_max = jnp.maximum(jnp.max(x32), 0.0)
+        s_x = jnp.maximum((x_max - x_min) / 255.0, 1e-8)
+        z_x = jnp.clip(jnp.round(-x_min / s_x), 0, 255)
+    else:
+        s_x = jnp.float32(x_scale)
+        z_x = jnp.float32(0.0 if x_zero is None else x_zero)
     # (q - z) has range [-255, 255]; real int8 pipelines keep the centered
     # value saturated to [-127, 127] (the paper's outlier-free activations
     # make saturation loss negligible — that is the point of the method).

@@ -34,7 +34,14 @@ Semantics match the gather oracle exactly:
     resolved by the caller from the LOGICAL ``max_len`` (the dispatcher in
     ``core.attention`` does this) so clipping thresholds are invariant to
     how many blocks happen to be live;
-  * the per-head gate ``pi`` multiplies the output tile in the epilogue.
+  * the per-head gate ``pi`` multiplies the output tile in the epilogue;
+  * int8 pools (``init_paged_cache(kv_int8=True)``): the per-slot scale
+    vectors ``k_scale``/``v_scale`` ((NB, BS) f32) ride the SAME
+    table-driven BlockSpec index_map as their pool block — each grid step
+    DMAs the block's (BS,) scale row next to its (BS, Hkv, Dh) payload and
+    dequantizes in the epilogue of the load (``k * ks[:, None]``), so the
+    streaming softmax only ever sees fp tiles. Stale scales in recycled
+    blocks are masked exactly like stale KV.
 
 Accumulation is f32 blockwise streaming, so results match the gather
 oracle to f32 round-off of the differing reduction order (~1 ulp per
@@ -47,7 +54,6 @@ target).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -58,11 +64,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _scores(tbl_ref, off_ref, q_ref, k_ref, *, cfg):
+def _scores(tbl_ref, off_ref, q_ref, k_ref, ks_ref, *, cfg):
     """(Tq*G, BS) masked scores of one (row, kv-head, table-entry) step."""
     b, h, w = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32)               # (Tq*G, Dh)
     k = k_ref[0, :, 0].astype(jnp.float32)            # (BS, Dh)
+    if ks_ref is not None:                            # int8 pool: dequant in
+        k = k * ks_ref[0][:, None]                    # the DMA epilogue
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * cfg["scale"]
@@ -81,8 +89,16 @@ def _scores(tbl_ref, off_ref, q_ref, k_ref, *, cfg):
     return jnp.where(mask, s, NEG_INF), mask
 
 
-def _vanilla_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, gate_ref, o_ref,
-                    m_scr, z_scr, acc_scr, *, cfg):
+def _vblock(v_ref, vs_ref):
+    """One pool block's V tile, dequantized if the pool is int8."""
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (BS, Dh)
+    if vs_ref is not None:
+        v = v * vs_ref[0][:, None]
+    return v
+
+
+def _vanilla_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                    gate_ref, o_ref, m_scr, z_scr, acc_scr, *, cfg):
     w = pl.program_id(2)
 
     @pl.when(w == 0)
@@ -91,14 +107,14 @@ def _vanilla_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, gate_ref, o_ref,
         z_scr[...] = jnp.zeros_like(z_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, ks_ref, cfg=cfg)
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     corr = jnp.exp(m_prev - m_new)
     p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
     z_scr[...] = z_scr[...] * corr + jnp.sum(p, axis=-1)
     acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
-        p, v_ref[0, :, 0].astype(jnp.float32),
+        p, _vblock(v_ref, vs_ref),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
@@ -110,8 +126,8 @@ def _vanilla_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, gate_ref, o_ref,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
-def _mz_kernel(tbl_ref, off_ref, q_ref, k_ref, m_ref, z_ref, m_scr, z_scr,
-               *, cfg):
+def _mz_kernel(tbl_ref, off_ref, q_ref, k_ref, ks_ref, m_ref, z_ref,
+               m_scr, z_scr, *, cfg):
     w = pl.program_id(2)
 
     @pl.when(w == 0)
@@ -119,7 +135,7 @@ def _mz_kernel(tbl_ref, off_ref, q_ref, k_ref, m_ref, z_ref, m_scr, z_scr,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         z_scr[...] = jnp.zeros_like(z_scr)
 
-    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, ks_ref, cfg=cfg)
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
@@ -132,22 +148,22 @@ def _mz_kernel(tbl_ref, off_ref, q_ref, k_ref, m_ref, z_ref, m_scr, z_scr,
         z_ref[0, 0] = z_scr[...]
 
 
-def _av_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, m_ref, z_ref, gate_ref,
-               o_ref, acc_scr, *, cfg):
+def _av_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+               m_ref, z_ref, gate_ref, o_ref, acc_scr, *, cfg):
     w = pl.program_id(2)
 
     @pl.when(w == 0)
     def _():
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, cfg=cfg)
+    s, mask = _scores(tbl_ref, off_ref, q_ref, k_ref, ks_ref, cfg=cfg)
     m = m_ref[0, 0]
     z = jnp.maximum(z_ref[0, 0], 1e-30)
     p = jnp.exp(s - m[:, None]) / z[:, None]
     p = jnp.clip((cfg["zeta"] - cfg["gamma"]) * p + cfg["gamma"], 0.0, 1.0)
     p = jnp.where(mask, p, 0.0)
     acc_scr[...] += jax.lax.dot_general(
-        p, v_ref[0, :, 0].astype(jnp.float32),
+        p, _vblock(v_ref, vs_ref),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     @pl.when(w == cfg["n_w"] - 1)
@@ -172,11 +188,15 @@ def paged_flash_attention(
     softcap: Optional[float] = None,
     gamma: float = 0.0,
     zeta: float = 1.0,
+    k_scale: Optional[jax.Array] = None,    # (NB, BS) f32 per-slot scales
+    v_scale: Optional[jax.Array] = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Fused paged attention; (gamma, zeta) = (0, 1) selects the single-pass
     vanilla path, anything else the two-pass clipped path. ``gamma`` must
-    already be resolved from the logical max_len (see module docstring)."""
+    already be resolved from the logical max_len (see module docstring).
+    ``k_scale``/``v_scale`` mark the pools as int8: each grid step DMAs the
+    visited block's scale row alongside it and dequantizes on load."""
     b, hkv, tq_g, dh = q.shape
     nb, bs = k_pool.shape[0], k_pool.shape[1]
     w = block_table.shape[1]
@@ -194,14 +214,24 @@ def paged_flash_attention(
     def kv_index(bi, hi, wi, tbl, _off):
         return (jnp.clip(tbl[bi, wi], 0, nb - 1), 0, hi, 0)
 
+    # int8 pools: the per-slot scale row of the visited block rides the same
+    # table-driven indirection — one (BS,) f32 vector per block DMA
+    def sc_index(bi, hi, wi, tbl, _off):
+        return (jnp.clip(tbl[bi, wi], 0, nb - 1), 0)
+
     q_spec = pl.BlockSpec((1, 1, tq_g, dh),
                           lambda bi, hi, wi, tbl, off_: (bi, hi, 0, 0))
     kv_spec = pl.BlockSpec((1, bs, 1, dh), kv_index)
+    sc_spec = pl.BlockSpec((1, bs), sc_index)
     o_spec = pl.BlockSpec((1, 1, tq_g, dh),
                           lambda bi, hi, wi, tbl, off_: (bi, hi, 0, 0))
     mz_spec = pl.BlockSpec((1, 1, tq_g),
                            lambda bi, hi, wi, tbl, off_: (bi, hi, 0))
     has_gate = gate_pi is not None
+    quantized = k_scale is not None
+    if quantized:
+        k_scale = k_scale.astype(jnp.float32)
+        v_scale = v_scale.astype(jnp.float32)
 
     def call(kern, in_specs, args, out_specs, out_shape, scratch):
         return pl.pallas_call(
@@ -217,46 +247,76 @@ def paged_flash_attention(
             interpret=interpret,
         )(table, off, *args)
 
+    # optional inputs (scale rows, gate) are appended positionally; each
+    # entry adapter peels the refs present for this configuration and calls
+    # the kernel with None for the absent ones (quantized/has_gate are
+    # trace-time constants, so the kernels specialize cleanly)
     if gamma == 0.0 and zeta == 1.0:
+        in_specs = [q_spec, kv_spec, kv_spec]
+        args = [q, k_pool, v_pool]
+        if quantized:
+            in_specs += [sc_spec, sc_spec]
+            args += [k_scale, v_scale]
         if has_gate:
-            kern = functools.partial(_vanilla_kernel, cfg=cfg)
-            in_specs = [q_spec, kv_spec, kv_spec, mz_spec]
-            args = (q, k_pool, v_pool, gate_pi)
-        else:
-            kern = functools.partial(
-                lambda t, of, qr, kr, vr, o, m, z, a, cfg: _vanilla_kernel(
-                    t, of, qr, kr, vr, None, o, m, z, a, cfg=cfg), cfg=cfg)
-            in_specs = [q_spec, kv_spec, kv_spec]
-            args = (q, k_pool, v_pool)
+            in_specs += [mz_spec]
+            args += [gate_pi]
+
+        def vanilla_entry(t, of, *rest):
+            it = iter(rest)
+            qr, kr, vr = next(it), next(it), next(it)
+            ks, vs = (next(it), next(it)) if quantized else (None, None)
+            gr = next(it) if has_gate else None
+            o, m, z, a = next(it), next(it), next(it), next(it)
+            _vanilla_kernel(t, of, qr, kr, vr, ks, vs, gr, o, m, z, a,
+                            cfg=cfg)
+
         return call(
-            kern, in_specs, args, o_spec,
+            vanilla_entry, in_specs, args, o_spec,
             jax.ShapeDtypeStruct((b, hkv, tq_g, dh), q.dtype),
             [pltpu.VMEM((tq_g,), jnp.float32),
              pltpu.VMEM((tq_g,), jnp.float32),
              pltpu.VMEM((tq_g, dh), jnp.float32)])
 
     # ---- clipped softmax: 2 streaming passes over the block table ----
+    def mz_entry(t, of, *rest):
+        it = iter(rest)
+        qr, kr = next(it), next(it)
+        ks = next(it) if quantized else None
+        mr, zr, ms, zs = next(it), next(it), next(it), next(it)
+        _mz_kernel(t, of, qr, kr, ks, mr, zr, ms, zs, cfg=cfg)
+
     m, z = call(
-        functools.partial(_mz_kernel, cfg=cfg),
-        [q_spec, kv_spec], (q, k_pool),
+        mz_entry,
+        [q_spec, kv_spec] + ([sc_spec] if quantized else []),
+        [q, k_pool] + ([k_scale] if quantized else []),
         [mz_spec, mz_spec],
         [jax.ShapeDtypeStruct((b, hkv, tq_g), jnp.float32),
          jax.ShapeDtypeStruct((b, hkv, tq_g), jnp.float32)],
         [pltpu.VMEM((tq_g,), jnp.float32),
          pltpu.VMEM((tq_g,), jnp.float32)])
 
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
+    in_specs += [mz_spec, mz_spec]
+    args += [m, z]
     if has_gate:
-        kern = functools.partial(_av_kernel, cfg=cfg)
-        in_specs = [q_spec, kv_spec, kv_spec, mz_spec, mz_spec, mz_spec]
-        args = (q, k_pool, v_pool, m, z, gate_pi)
-    else:
-        kern = functools.partial(
-            lambda t, of, qr, kr, vr, mr, zr, o, a, cfg: _av_kernel(
-                t, of, qr, kr, vr, mr, zr, None, o, a, cfg=cfg), cfg=cfg)
-        in_specs = [q_spec, kv_spec, kv_spec, mz_spec, mz_spec]
-        args = (q, k_pool, v_pool, m, z)
+        in_specs += [mz_spec]
+        args += [gate_pi]
+
+    def av_entry(t, of, *rest):
+        it = iter(rest)
+        qr, kr, vr = next(it), next(it), next(it)
+        ks, vs = (next(it), next(it)) if quantized else (None, None)
+        mr, zr = next(it), next(it)
+        gr = next(it) if has_gate else None
+        o, a = next(it), next(it)
+        _av_kernel(t, of, qr, kr, vr, ks, vs, mr, zr, gr, o, a, cfg=cfg)
+
     return call(
-        kern, in_specs, args, o_spec,
+        av_entry, in_specs, args, o_spec,
         jax.ShapeDtypeStruct((b, hkv, tq_g, dh), q.dtype),
         [pltpu.VMEM((tq_g, dh), jnp.float32)])
 
@@ -274,6 +334,8 @@ def paged_mha(
     softcap: Optional[float] = None,
     gamma: float = 0.0,
     zeta: float = 1.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Model-layout adapter: head-group the queries (all G query heads of a
@@ -294,6 +356,6 @@ def paged_mha(
     out = paged_flash_attention(
         qf, k_pool, v_pool, block_table, off, gf, group=g, causal=causal,
         window=window, softcap=softcap, gamma=gamma, zeta=zeta,
-        interpret=interpret)
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
     return out.reshape(b, hkv, tq, g, dh).transpose(0, 2, 1, 3, 4) \
         .reshape(b, tq, hq, dh)

@@ -65,6 +65,7 @@ from repro.nn.xlstm import (
     slstm_block_init,
     xlstm_init_state,
 )
+from repro.quant.kv_cache import kv_quant
 from repro.quant.qconfig import NO_QUANT, QuantContext
 
 
@@ -300,6 +301,7 @@ def _attn_block_apply(
 
     explicit_mask = None
     paged_table = None
+    paged_scales = None
     if cache is not None:
         # align fresh q/k/v sharding with the d_head-sharded KV cache —
         # otherwise GSPMD falls back to "involuntary full rematerialization"
@@ -328,11 +330,32 @@ def _attn_block_apply(
             if act_tok is not None:
                 phys = jnp.where(act_tok, phys, -1)
             phys = jnp.where(phys < 0, nb, phys)    # out of bounds -> dropped
-            k_cache = cache["k"].at[phys, tpos % bs].set(
-                k.astype(cache["k"].dtype), mode="drop")
-            v_cache = cache["v"].at[phys, tpos % bs].set(
-                v.astype(cache["v"].dtype), mode="drop")
-            new_cache = {"k": k_cache, "v": v_cache, "block_table": table}
+            if "k_scale" in cache:
+                # int8 pool: quantization fused into the same masked scatter.
+                # Each token is quantized exactly ONCE from its fp value —
+                # its int8 code + per-slot scale land together, so stored
+                # bits are a pure function of (value, logical position) and
+                # serving stays bitwise invariant to chunking/slots/resume
+                # (see quant.kv_cache for why not a scalar per-block scale).
+                kq, ks = kv_quant(k)
+                vq, vs = kv_quant(v)
+                k_cache = cache["k"].at[phys, tpos % bs].set(kq, mode="drop")
+                v_cache = cache["v"].at[phys, tpos % bs].set(vq, mode="drop")
+                new_cache = {
+                    "k": k_cache, "v": v_cache,
+                    "k_scale": cache["k_scale"].at[phys, tpos % bs].set(
+                        ks, mode="drop"),
+                    "v_scale": cache["v_scale"].at[phys, tpos % bs].set(
+                        vs, mode="drop"),
+                    "block_table": table,
+                }
+                paged_scales = (new_cache["k_scale"], new_cache["v_scale"])
+            else:
+                k_cache = cache["k"].at[phys, tpos % bs].set(
+                    k.astype(cache["k"].dtype), mode="drop")
+                v_cache = cache["v"].at[phys, tpos % bs].set(
+                    v.astype(cache["v"].dtype), mode="drop")
+                new_cache = {"k": k_cache, "v": v_cache, "block_table": table}
             paged_table = table
         elif per_row:
             # Masked per-token scatter: row b writes token j of its block at
@@ -433,10 +456,12 @@ def _attn_block_apply(
         gate_pi = gate_probs(p["gate"], cfg.gate_cfg, x_heads, h)
 
     if paged_table is not None:
+        k_scale, v_scale = paged_scales if paged_scales is not None else (None, None)
         attn_out = paged_attention(q, k_all, v_all, paged_table, acfg,
                                    q_offset=q_offset, gate_pi=gate_pi,
                                    live_width=paged_live_width,
                                    live_widths=paged_live_widths,
+                                   k_scale=k_scale, v_scale=v_scale,
                                    backend=cfg.paged_backend)
     elif explicit_mask is not None:
         attn_out = dense_attention(q, k_all, v_all, acfg, mask=explicit_mask,
@@ -602,7 +627,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
                      num_blocks: int, block_size: int = 16,
-                     dtype=None) -> Params:
+                     dtype=None, kv_int8: bool = False) -> Params:
     """Paged decode state (vLLM-style): each global-attention layer holds a
     shared block pool ``k``/``v`` of shape (num_blocks, block_size, Hkv, Dh)
     plus a per-row ``block_table`` (batch, ceil(max_len / block_size)) of
@@ -616,6 +641,14 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
     ``block_table[pos // block_size]`` indirection (see _attn_block_apply).
     Ring (local_attn) and recurrent states keep their dense per-row layout;
     they are already O(window) / O(1) per row.
+
+    ``kv_int8=True`` stores the pools as int8 plus per-block scale vectors
+    ``k_scale``/``v_scale`` of shape (num_blocks, block_size) — one f32
+    scale per token slot, written by the same masked scatter that writes
+    the pool (see quant.kv_cache). KV block memory drops ~3.5x for typical
+    head shapes (``paged_kv_block_bytes``), so an equal-byte pool holds
+    proportionally more blocks and admits proportionally more concurrent
+    rows. Only the "attn" pools quantize; ring/recurrent state stays fp.
     """
     dtype = dtype or cfg.compute_dtype
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
@@ -631,14 +664,33 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
 
     def one(kind: str):
         if kind == "attn":
-            return {
-                "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
-                "v": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+            pool_dtype = jnp.int8 if kv_int8 else dtype
+            c = {
+                "k": jnp.zeros((num_blocks, block_size, hkv, dh), pool_dtype),
+                "v": jnp.zeros((num_blocks, block_size, hkv, dh), pool_dtype),
                 "block_table": jnp.full((batch, n_entries), -1, jnp.int32),
             }
+            if kv_int8:
+                c["k_scale"] = jnp.zeros((num_blocks, block_size), jnp.float32)
+                c["v_scale"] = jnp.zeros((num_blocks, block_size), jnp.float32)
+            return c
         return _cache_entry(cfg, kind, batch, max_len, dtype)
 
     return _assemble_cache(cfg, one)
+
+
+def paged_kv_block_bytes(cfg: ModelConfig, block_size: int = 16,
+                         kv_int8: bool = False, dtype=None) -> int:
+    """Bytes ONE pool block costs per global-attention layer (k + v +, for
+    int8, the two per-slot scale vectors). The capacity tests and the
+    serving benchmark size fp and int8 pools to equal byte budgets with
+    this, so 'admits Nx more rows at equal memory' is computed from the
+    same accounting the pools actually allocate."""
+    dtype = dtype or cfg.compute_dtype
+    elems = block_size * cfg.n_kv_heads * cfg.head_dim
+    if kv_int8:
+        return 2 * elems * 1 + 2 * block_size * 4     # int8 kv + f32 scales
+    return 2 * elems * jnp.dtype(dtype).itemsize
 
 
 def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Array],

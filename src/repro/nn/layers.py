@@ -34,6 +34,8 @@ def linear_apply(
     p: Params, x: Array, ctx: QuantContext = NO_QUANT, name: str = "linear",
     compute_dtype=None,
 ) -> Array:
+    if ctx.mode == "int8" and "w_q8" in p:
+        return _linear_int8_apply(p, x, ctx, name)
     w = ctx.weight(name, p["w"])
     if compute_dtype is not None:
         x = x.astype(compute_dtype)
@@ -43,6 +45,29 @@ def linear_apply(
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return ctx.act(name + ".out", y)
+
+
+def _linear_int8_apply(p: Params, x: Array, ctx: QuantContext,
+                       name: str) -> Array:
+    """Hardware W8A8 path: int8 x int8 -> int32 through the MXU kernel.
+
+    Weights come pre-quantized on the params tree
+    (quant.int8_weights.attach_int8_weights); the activation range is the
+    STATIC per-tensor (s, z) calibrated for this site — falling back to
+    dynamic in-kernel ranging only if the site was never seen."""
+    from repro.kernels.int8_matmul import int8_matmul  # avoid import cycle
+
+    qp = ctx.act_qparams(name + ".in")
+    s_x, z_x = qp if qp is not None else (None, None)
+    lead = x.shape[:-1]
+    y = int8_matmul(
+        x.reshape(-1, x.shape[-1]), p["w_q8"], p["w_scale"],
+        x_scale=s_x, x_zero=z_x,
+        interpret=jax.default_backend() != "tpu")
+    y = y.reshape(*lead, p["w_q8"].shape[-1])
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
 
 
 # --------------------------------------------------------------------------

@@ -26,6 +26,13 @@ __all__ = [
     "NO_QUANT", "QConfig", "QuantContext",
     "calibrate", "evaluate_perplexity", "make_quantized_apply", "ptq_sweep",
 ]
-from repro.quant.int8_weights import build_int8_cache, int8_cache_bytes, linear_int8  # noqa: E402
+from repro.quant.int8_weights import (  # noqa: E402
+    attach_int8_weights,
+    build_int8_cache,
+    int8_cache_bytes,
+    linear_int8,
+)
+from repro.quant.kv_cache import kv_dequant, kv_quant  # noqa: E402
 
-__all__ += ["build_int8_cache", "int8_cache_bytes", "linear_int8"]
+__all__ += ["attach_int8_weights", "build_int8_cache", "int8_cache_bytes",
+            "linear_int8", "kv_quant", "kv_dequant"]

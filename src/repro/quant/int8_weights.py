@@ -46,6 +46,44 @@ def int8_cache_bytes(cache: Dict[str, Tuple[Array, Array]]) -> int:
     return sum(int(wq.size) for wq, _ in cache.values())
 
 
+def attach_int8_weights(params: Any, skip: Tuple[str, ...] = (r".*lm_head.*",)
+                        ) -> Any:
+    """Return a params tree with ``w_q8``/``w_scale`` leaves attached beside
+    every matmul weight ``w``.
+
+    Attaching to the tree (rather than a side table keyed by site name) is
+    what makes the serving W8A8 path correct for every layer: site names in
+    ``models.transformer.group_apply`` repeat across groups
+    (``layer_attn0`` in every group), so a name-keyed cache would collide,
+    while params paths are unique. It also composes with scanned configs:
+    a stacked ``(G, K, N)`` weight gets a stacked ``(G, K, N)`` int8 leaf +
+    ``(G,)`` per-layer scales, and the unrolled apply's ``tree_slice``
+    carves out each layer's pair alongside its fp weight. ``linear_apply``
+    routes through the integer kernel whenever the ctx is in 'int8' mode
+    and ``w_q8`` is present."""
+    def walk(node: Any, prefix: str) -> Any:
+        if isinstance(node, (list, tuple)):
+            return [walk(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+        if not isinstance(node, dict):
+            return node
+        out = {k: walk(v, f"{prefix}/{k}" if prefix else k)
+               for k, v in node.items()}
+        w = node.get("w")
+        wpath = f"{prefix}/w" if prefix else "w"
+        if (w is not None and not isinstance(w, (dict, list, tuple))
+                and getattr(w, "ndim", 0) in (2, 3)
+                and _MATMUL_W.match(wpath)
+                and not any(re.match(p, wpath) for p in skip)):
+            if w.ndim == 2:
+                wq, s = quantize_weights_int8(w)
+            else:  # scanned stacked groups: per-layer symmetric scales
+                wq, s = jax.vmap(quantize_weights_int8)(w)
+            out["w_q8"], out["w_scale"] = wq, s
+        return out
+
+    return walk(params, "")
+
+
 def linear_int8(cache: Dict[str, Tuple[Array, Array]], path: str,
                 x: Array, bias: Array = None, interpret: bool = True) -> Array:
     """Run one cached linear through the integer kernel."""

@@ -16,6 +16,11 @@ of three modes:
   collect  — record tensors for range estimation (run UN-jitted)
   apply    — fake-quantize using finalized (s, z)  (jit-safe; scales are
              closed-over constants)
+  int8     — hardware W8A8: ``act``/``weight`` are identity (no float
+             fake-quant anywhere); instead, linears that carry attached
+             int8 weights (quant.int8_weights.attach_int8_weights) pull
+             their STATIC input (s, z) via ``act_qparams`` and run the
+             integer kernel. Reached from 'apply' via ``use_int8_runtime``.
 """
 from __future__ import annotations
 
@@ -63,11 +68,16 @@ class QuantContext:
     """Threaded through model.apply; see module docstring."""
 
     def __init__(self, qconfig: Optional[QConfig], mode: str = "off") -> None:
-        assert mode in ("off", "collect", "apply")
+        assert mode in ("off", "collect", "apply", "int8")
         self.qconfig = qconfig
         self.mode = mode if qconfig is not None else "off"
         self._estimators: Dict[str, RangeEstimator] = {}
         self._ranges: Dict[str, Tuple[Array, Array]] = {}
+        # site -> (scale, zero) python floats, precomputed by
+        # use_int8_runtime — act_qparams may be called inside a jit trace,
+        # where even concrete range arrays become tracers, so the floats
+        # must exist before tracing starts
+        self._act_qp: Dict[str, Tuple[float, float]] = {}
 
     # -- calibration ------------------------------------------------------
     def _estimator_for(self, name: str, spec: QuantSpec, kind: str) -> RangeEstimator:
@@ -90,9 +100,38 @@ class QuantContext:
         self._ranges = dict(ranges)
         self.mode = "apply"
 
+    def use_int8_runtime(self) -> None:
+        """Switch a calibrated context to the hardware int8 path.
+
+        In 'int8' mode the fake-quant sites become identity — real W8A8
+        quantizes the two matmul operands, not every intermediate — and
+        ``act_qparams`` serves the static input ranges to linear_apply.
+        All (s, z) pairs are materialized to python floats HERE, outside
+        any trace."""
+        assert self._ranges or self.mode == "apply", (
+            "use_int8_runtime needs finalized calibration ranges")
+        spec = self.qconfig.act_spec()
+        self._act_qp = {}
+        for name, (lo, hi) in self._ranges.items():
+            if name.endswith("#w"):     # weight ranges: not activation sites
+                continue
+            s, z = scale_zero_point(lo, hi, spec)
+            self._act_qp[name] = (float(s), float(z))
+        self.mode = "int8"
+
+    def act_qparams(self, name: str) -> Optional[Tuple[float, float]]:
+        """Static (scale, zero_point) for an activation site, as python
+        floats (jit-safe closure constants). None if the site was not seen
+        during calibration or is skipped — callers fall back to dynamic
+        ranging inside the kernel."""
+        if self.qconfig is None or self.qconfig.skipped(name):
+            return None
+        return self._act_qp.get(name)
+
     # -- the two quantization sites --------------------------------------
     def act(self, name: str, x: Array) -> Array:
-        if self.mode == "off" or self.qconfig is None or self.qconfig.skipped(name):
+        if (self.mode in ("off", "int8") or self.qconfig is None
+                or self.qconfig.skipped(name)):
             return x
         spec = self.qconfig.act_spec()
         if self.mode == "collect":
@@ -105,7 +144,8 @@ class QuantContext:
         return fake_quant(x, s, z, spec)
 
     def weight(self, name: str, w: Array) -> Array:
-        if self.mode == "off" or self.qconfig is None or self.qconfig.skipped(name):
+        if (self.mode in ("off", "int8") or self.qconfig is None
+                or self.qconfig.skipped(name)):
             return w
         spec = self.qconfig.weight_spec(w.ndim)
         wname = name + "#w"

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import ModelConfig, init_cache, model_apply
+from repro.quant.qconfig import NO_QUANT, QuantContext
 
 Array = jax.Array
 
@@ -148,7 +149,8 @@ def decode_one(params, cfg: ModelConfig, cache, tokens: Array, pos,
 
 def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
               counts: Array, paged_live_width: Optional[int] = None,
-              paged_live_widths: Optional[Array] = None):
+              paged_live_widths: Optional[Array] = None,
+              ctx: QuantContext = NO_QUANT):
     """Variable-Tq fused step: the token-budget scheduler's mixed
     prefill/decode forward.
 
@@ -162,11 +164,15 @@ def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
     at row b's LAST real token — the only position whose prediction the
     scheduler may consume (chunk-aware sampling: a non-final prefill chunk
     discards it, the final chunk samples the request's first token from
-    it, a decode row samples its next token)."""
+    it, a decode row samples its next token).
+
+    ``ctx``: optional QuantContext in 'int8' mode — the W8A8 serving path.
+    Its calibrated ranges are python-float closure constants, so the tick
+    stays jit-safe; the context is captured, not traced."""
     b, t = tokens.shape
     counts = jnp.asarray(counts, jnp.int32)
     active = jnp.arange(t, dtype=jnp.int32)[None, :] < counts[:, None]
-    logits, aux = model_apply(params, cfg, {"tokens": tokens},
+    logits, aux = model_apply(params, cfg, {"tokens": tokens}, ctx=ctx,
                               cache=cache, pos=pos, active=active,
                               paged_live_width=paged_live_width,
                               paged_live_widths=paged_live_widths)

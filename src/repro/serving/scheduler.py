@@ -72,6 +72,24 @@ Slot and block bookkeeping is host-side python (cheap, O(B) per step); all
 tensor work stays jitted with static shapes — (T, live_width) pairs are
 bucketed to powers of two so at most O(log(budget) * log(W)) step
 specializations exist.
+
+INT8 serving (the paper's payoff, live): ``qconfig=`` turns the tick into
+a W8A8 forward — activation ranges are PTQ-calibrated ONCE at engine
+construction against a few synthetic batches (``quant.ptq.calibrate``),
+the matmul weights are pre-quantized onto the params tree
+(``quant.int8_weights.attach_int8_weights``) and every linear routes
+through the int8 MXU kernel with those static ranges (see
+``nn.layers.linear_apply``); the calibrated context is captured by the
+jitted step as closure constants, so the tick compiles exactly like the
+fp one. ``kv_int8=`` (default: on whenever ``qconfig`` is given with
+``paged=True``) stores the paged KV pools as int8 with per-slot scale
+vectors — quantize fused into the cache scatter, dequant into both paged
+read backends (``init_paged_cache(kv_int8=True)``). KV block memory drops
+~3.5x for typical head shapes, so an equal-byte pool admits proportionally
+more concurrent rows; serving stays bitwise invariant to chunking, slot
+assignment and preemption-resume because each token is quantized exactly
+once at write (see ``quant.kv_cache``). ``kv_int8=True`` alone (no
+``qconfig``) is allowed: fp matmuls over a quantized cache.
 """
 from __future__ import annotations
 
@@ -86,7 +104,11 @@ from repro.models.transformer import (
     ModelConfig,
     init_cache,
     init_paged_cache,
+    model_apply,
 )
+from repro.quant.int8_weights import attach_int8_weights
+from repro.quant.ptq import calibrate
+from repro.quant.qconfig import NO_QUANT, QConfig
 from repro.serving.decode import GenerateConfig, sample_rows, step_rows
 
 Array = jax.Array
@@ -200,6 +222,35 @@ def _bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def _calibrate_engine(params, cfg: ModelConfig, qconfig: QConfig,
+                      max_len: int, num_batches: int):
+    """PTQ-calibrate activation ranges for the W8A8 serving tick.
+
+    Runs ONCE at engine construction: a few synthetic uniform-token batches
+    stream through the UN-jitted forward in 'collect' mode
+    (``quant.ptq.calibrate``), the estimators close into static per-site
+    (s, z), and the context flips to 'int8' — from then on the calibrated
+    ranges are python-float closure constants of the jitted tick. Synthetic
+    calibration is exactly the deployment-friendly protocol the paper
+    argues the outlier-free models tolerate: per-tensor static ranges with
+    no data-dependent tuning."""
+    t = max(1, min(32, max_len, cfg.max_seq_len))
+    key = jax.random.PRNGKey(0)
+    batches = [
+        {"tokens": jax.random.randint(jax.random.fold_in(key, i),
+                                      (2, t), 0, cfg.vocab_size)}
+        for i in range(num_batches)
+    ]
+
+    def apply_fn(p, batch, ctx):
+        return model_apply(p, cfg, batch, ctx=ctx)[0]
+
+    ctx = calibrate(apply_fn, params, batches, qconfig,
+                    num_batches=num_batches)
+    ctx.use_int8_runtime()
+    return ctx
+
+
 class ContinuousBatcher:
     """Token-budget slot-pool scheduler over a shared static KV cache
     (dense or paged).
@@ -217,7 +268,30 @@ class ContinuousBatcher:
                  gen: Optional[GenerateConfig] = None,
                  token_budget: int = 256,
                  prefill_chunk: Optional[int] = None,
-                 admit_watermark: int = 0) -> None:
+                 admit_watermark: int = 0,
+                 qconfig: Optional[QConfig] = None,
+                 kv_int8: Optional[bool] = None,
+                 calib_batches: int = 4) -> None:
+        # ---- INT8 serving (W8A8 tick + quantized paged KV) -------------
+        if kv_int8 is None:
+            kv_int8 = qconfig is not None and paged
+        if kv_int8 and not paged:
+            raise ValueError(
+                "kv_int8 requires paged=True: the int8 KV layout is the "
+                "block pool + per-slot scale vectors (init_paged_cache)")
+        self.kv_int8 = bool(kv_int8)
+        self.qconfig = qconfig
+        self._qctx = NO_QUANT
+        if qconfig is not None:
+            # W8A8 needs per-layer calibration sites and per-layer int8
+            # weight slices, so the engine runs the unrolled layer path
+            # (functionally identical — stacked scanned params are
+            # tree_slice'd per group by model_apply's unrolled branch)
+            if cfg.scan_layers:
+                cfg = dataclasses.replace(cfg, scan_layers=False)
+            self._qctx = _calibrate_engine(params, cfg, qconfig, max_len,
+                                           calib_batches)
+            params = attach_int8_weights(params, skip=qconfig.skip_patterns)
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -252,7 +326,8 @@ class ContinuousBatcher:
             # ticks after an admit/alloc/retire/preempt pay the re-upload
             self._tables_dirty = True
             make_cache = lambda b: init_paged_cache(  # noqa: E731
-                cfg, b, max_len, self.num_blocks, block_size)
+                cfg, b, max_len, self.num_blocks, block_size,
+                kv_int8=self.kv_int8)
         else:
             make_cache = lambda b: init_cache(cfg, b, max_len)  # noqa: E731
         self.cache = make_cache(batch_size)
@@ -262,7 +337,8 @@ class ContinuousBatcher:
         # prefill. In paged mode only its batch-led leaves are ever read —
         # build it with a 1-block pool so the template does not duplicate
         # the real pool's device memory
-        self._row_template = init_paged_cache(cfg, 1, max_len, 1, block_size) \
+        self._row_template = init_paged_cache(cfg, 1, max_len, 1, block_size,
+                                              kv_int8=self.kv_int8) \
             if paged else make_cache(1)
         kinds = cfg.pattern + cfg.tail_pattern
         # recurrent states have no per-token write index to mask, so ragged
@@ -285,6 +361,7 @@ class ContinuousBatcher:
             lambda a, b: a.shape == b.shape, spec1, spec2)
 
         gen_cfg = self._gen
+        qctx = self._qctx    # calibrated ranges = jit closure constants
 
         def _mixed_step(params, cache, tokens, pos, counts, keys,
                         live_width, live_widths):
@@ -299,7 +376,8 @@ class ContinuousBatcher:
             # identical samples (see decode.py).
             last, new_cache = step_rows(
                 params, cfg, cache, tokens, pos, counts,
-                paged_live_width=live_width, paged_live_widths=live_widths)
+                paged_live_width=live_width, paged_live_widths=live_widths,
+                ctx=qctx)
             nxt = sample_rows(last, gen_cfg, keys, pos + counts)
             return nxt, new_cache
 
