@@ -23,6 +23,16 @@ recycled blocks keep garbage KV applies verbatim to garbage scales. The
 scale vector still lives and travels *per block* (it rides the block-table
 DMA next to its pool block in the Pallas kernel), at 4 bytes per slot
 against ``Hkv * Dh`` bytes of int8 payload.
+
+Swapped preemption gets the same guarantee for free: the scale vectors are
+batch-free *pool* leaves exactly like the int8 K/V pools, so the
+scheduler's swap-out copies a victim's scale rows to host alongside its
+blocks and swap-in restores both into freshly allocated block ids
+(``serving.scheduler.SwappedState``). Because the stored bits are already
+a pure function of (token value, logical position), a swap round-trip is
+bit-identical to never having been preempted — which is what lets
+tests/test_slo_serving.py assert swap-resume == recompute-resume ==
+unpreempted, bitwise, on the int8-KV engine.
 """
 from __future__ import annotations
 

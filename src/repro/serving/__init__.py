@@ -7,17 +7,42 @@ from repro.serving.decode import (
     sample_logits,
     sample_rows,
     sample_token_at,
+    make_mixed_step,
     step_rows,
 )
 
 __all__ = ["GenerateConfig", "chunked_prefill", "decode_one", "generate",
            "prefill", "sample_logits", "sample_rows", "sample_token_at",
-           "step_rows"]
+           "make_mixed_step", "step_rows"]
 from repro.serving.scheduler import (  # noqa: E402
+    AllocatorAuditError,
     BlockAllocator,
     ContinuousBatcher,
     PrefillState,
     Request,
+    SwappedState,
 )
 
-__all__ += ["BlockAllocator", "ContinuousBatcher", "PrefillState", "Request"]
+__all__ += ["AllocatorAuditError", "BlockAllocator", "ContinuousBatcher",
+            "PrefillState", "Request", "SwappedState"]
+from repro.serving.workload import (  # noqa: E402
+    DEFAULT_TIERS,
+    TickCostModel,
+    TierSpec,
+    TraceEntry,
+    WorkloadConfig,
+    WorkloadReport,
+    generate_trace,
+    run_workload,
+)
+
+__all__ += ["DEFAULT_TIERS", "TickCostModel", "TierSpec", "TraceEntry",
+            "WorkloadConfig", "WorkloadReport", "generate_trace",
+            "run_workload"]
+from repro.serving.chaos import (  # noqa: E402
+    ChaosHarness,
+    FaultPlan,
+    FaultyAllocator,
+)
+
+__all__ += ["ChaosHarness", "FaultPlan", "FaultyAllocator"]

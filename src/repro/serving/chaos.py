@@ -1,0 +1,247 @@
+"""Deterministic fault injection + invariant auditing for the engine.
+
+The scheduler's failure handling (transient-fault stalling, bounded
+swap-in retry, priority-ordered shedding) is worthless if it only runs on
+the happy path. This module makes faults *reproducible*: a ``FaultPlan``
+is a seeded schedule of misbehaviour — allocation failures at chosen
+ticks, spurious preemption storms, admission floods of junk requests,
+swap-in denial windows — and ``ChaosHarness`` replays it against a live
+``ContinuousBatcher``, running the full block-accounting audit after
+every step. The contract under chaos:
+
+  * **never a crash** — every injected fault is absorbed by policy
+    (retry, stall, degrade to recompute, or shed in priority order);
+  * **never a corrupted row** — surviving requests produce exactly the
+    tokens an unperturbed engine would (position-keyed sampling +
+    quantize-on-write make this checkable bitwise);
+  * **never a leaked block** — ``batcher.audit()`` passes after every
+    tick: each block is exactly one of free / owned-by-a-live-row, block
+    tables mirror slot state, swap-byte accounting balances.
+
+Fault taxonomy (matching the scheduler's degradation order):
+
+  ``alloc_fail``      transient: allocator refuses although blocks exist.
+                      Engine must stall that row and retry next tick —
+                      *not* preempt (the pool isn't actually full) — and
+                      only shed (lowest priority first) if the fault
+                      persists past its streak budget.
+  ``preempt_storm``   spurious preemptions of running rows. Victims must
+                      resume (swap or recompute) token-exact.
+  ``flood``           bursts of junk admissions at low priority. Must not
+                      starve higher tiers or corrupt accounting.
+  ``swap_deny``       swap-in refusals. Engine retries a bounded number
+                      of times then degrades to recompute-resume.
+
+Run the seeded smoke (also wired into CI's fast tier)::
+
+    PYTHONPATH=src python -m repro.serving.chaos --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, fully explicit schedule of faults over ``ticks`` engine
+    steps. Instances are plain data — printable, diffable, replayable."""
+    seed: int
+    ticks: int
+    alloc_fail: frozenset = frozenset()     # ticks where alloc is denied
+    preempt_storm: Tuple[Tuple[int, int], ...] = ()   # (tick, n_victims)
+    flood: Tuple[Tuple[int, int], ...] = ()           # (tick, n_junk)
+    swap_deny: frozenset = frozenset()      # ticks where swap-in is denied
+
+    @staticmethod
+    def random(seed: int, ticks: int = 40,
+               p_alloc: float = 0.15, p_storm: float = 0.10,
+               p_flood: float = 0.08, p_deny: float = 0.15) -> "FaultPlan":
+        """Draw a plan from a seeded RNG. Distinct seeds give distinct
+        plans; the same seed always gives the same plan."""
+        rng = np.random.default_rng(seed)
+        alloc: Set[int] = set()
+        storms: List[Tuple[int, int]] = []
+        floods: List[Tuple[int, int]] = []
+        deny: Set[int] = set()
+        for t in range(ticks):
+            r = rng.random(4)
+            if r[0] < p_alloc:
+                # faults arrive in short bursts, like a real flaky resource
+                for d in range(int(rng.integers(1, 4))):
+                    alloc.add(t + d)
+            if r[1] < p_storm:
+                storms.append((t, int(rng.integers(1, 3))))
+            if r[2] < p_flood:
+                floods.append((t, int(rng.integers(1, 4))))
+            if r[3] < p_deny:
+                deny.add(t)
+        return FaultPlan(seed=seed, ticks=ticks,
+                         alloc_fail=frozenset(alloc),
+                         preempt_storm=tuple(storms),
+                         flood=tuple(floods),
+                         swap_deny=frozenset(deny))
+
+
+class FaultyAllocator:
+    """Wraps a ``BlockAllocator``; on fault ticks every ``alloc`` is
+    denied (returns None) while the blocks remain genuinely available —
+    exactly the "spurious failure" the scheduler must treat as transient.
+    All other methods delegate, so the audit sees the real free list."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.failing = False
+        self.denied = 0
+
+    @property
+    def num_blocks(self) -> int:
+        return self.inner.num_blocks
+
+    @property
+    def available(self) -> int:
+        return self.inner.available
+
+    def alloc(self, n: int):
+        if self.failing and n > 0:
+            self.denied += 1
+            return None
+        return self.inner.alloc(n)
+
+    def free(self, blocks) -> None:
+        self.inner.free(blocks)
+
+    def free_list(self):
+        return self.inner.free_list()
+
+
+class ChaosHarness:
+    """Replays a ``FaultPlan`` against a batcher: per tick, arms the
+    faulty allocator, fires preemption storms / floods due this tick,
+    steps the engine, then runs the full allocator audit. Any crash or
+    audit failure propagates — the test contract is that none occurs."""
+
+    JUNK_UID0 = 1_000_000            # flood uids, outside any trace
+
+    def __init__(self, batcher: ContinuousBatcher, plan: FaultPlan,
+                 vocab: int = 64):
+        self.b = batcher
+        self.plan = plan
+        self.vocab = vocab
+        self.rng = np.random.default_rng(plan.seed ^ 0x5EED)
+        self.tick = 0
+        self._junk = ChaosHarness.JUNK_UID0
+        self.events: List[str] = []
+        if batcher.paged:
+            batcher.allocator = FaultyAllocator(batcher.allocator)
+        batcher._swap_in_gate = \
+            lambda req: self.tick not in self.plan.swap_deny
+        self._storms: Dict[int, int] = dict(plan.preempt_storm)
+        self._floods: Dict[int, int] = dict(plan.flood)
+
+    def _storm(self, n: int) -> None:
+        live = [i for i, s in enumerate(self.b.slots) if s.req is not None]
+        self.rng.shuffle(live)
+        for i in live[:n]:
+            if self.b.slots[i].req is None:     # freed by an earlier victim
+                continue
+            self.events.append(f"t{self.tick} preempt slot{i} "
+                               f"uid{self.b.slots[i].req.uid}")
+            self.b.preempt_slot(i)
+
+    def _flood(self, n: int) -> None:
+        for _ in range(n):
+            plen = int(self.rng.integers(1, 9))
+            prompt = self.rng.integers(4, self.vocab, size=plen)
+            self.b.submit(Request(uid=self._junk,
+                                  prompt=np.asarray(prompt, np.int32),
+                                  max_new_tokens=int(self.rng.integers(1, 5)),
+                                  priority=-1))
+            self.events.append(f"t{self.tick} flood uid{self._junk}")
+            self._junk += 1
+
+    def step(self, now: Optional[float] = None) -> None:
+        t = self.tick
+        if self.b.paged:
+            self.b.allocator.failing = t in self.plan.alloc_fail
+        if t in self._storms:
+            self._storm(self._storms[t])
+        if t in self._floods:
+            self._flood(self._floods[t])
+        self.b.step(now=now)
+        self.b.audit()
+        self.tick += 1
+
+    def run(self, drain_ticks: int = 400) -> None:
+        """Run the plan's ticks, then disarm all faults and drain."""
+        for _ in range(self.plan.ticks):
+            self.step()
+        if self.b.paged:
+            self.b.allocator.failing = False
+        self.b._swap_in_gate = None
+        for _ in range(drain_ticks):
+            if not self.b.queue and \
+                    all(s.req is None for s in self.b.slots):
+                return
+            self.b.step()
+            self.b.audit()
+        raise RuntimeError("engine failed to drain after chaos plan "
+                           f"seed={self.plan.seed}")
+
+
+def _smoke() -> int:
+    """Five seeded plans against a tiny paged int8-KV engine; exits
+    nonzero on any crash, audit violation, or failed drain."""
+    import jax
+    from repro.models import model_init
+    from repro.models.transformer import ModelConfig
+
+    cfg = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=64, pos="rope",
+                      max_seq_len=64, scan_layers=False, remat=False,
+                      mlp_kind="swiglu", norm="rmsnorm")
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    for seed in range(5):
+        plan = FaultPlan.random(seed, ticks=30)
+        b = ContinuousBatcher(
+            params, cfg, batch_size=4, max_len=64, token_budget=48,
+            paged=True, num_blocks=24, block_size=8, kv_int8=True,
+            swap_break_even_tokens=16, on_pool_exhausted="shed",
+            debug_audit=True)
+        rng = np.random.default_rng(1234 + seed)
+        for uid in range(10):
+            plen = int(rng.integers(2, 24))
+            b.submit(Request(
+                uid=uid,
+                prompt=rng.integers(4, 64, size=plen).astype(np.int32),
+                max_new_tokens=int(rng.integers(2, 9)),
+                priority=int(rng.integers(0, 3))))
+        h = ChaosHarness(b, plan)
+        h.run()
+        done = len(b.done)
+        failed = len(b.failed)
+        print(f"plan seed={seed}: done={done} failed={failed} "
+              f"denied_allocs={b.allocator.denied} "
+              f"events={len(h.events)} audit=clean")
+    print("chaos smoke: 5 plans, zero crashes, zero audit violations")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run 5 seeded fault plans against a tiny engine")
+    args = ap.parse_args()
+    if args.smoke:
+        return _smoke()
+    ap.print_help()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -181,6 +181,32 @@ def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
     return last, aux["cache"]
 
 
+def make_mixed_step(cfg: ModelConfig, gen: GenerateConfig,
+                    ctx: QuantContext = NO_QUANT):
+    """Build the jitted fused engine tick ``ContinuousBatcher`` runs every
+    step: one ``step_rows`` forward advancing every runnable row at its own
+    position — decode rows by 1 token, prefill rows by a chunk; padding
+    tokens' writes are dropped inside model_apply (masked per-token
+    scatter) — followed by position-keyed sampling. ``live_width``
+    (static) bounds the paged attention read to the allocated block-table
+    prefix and ``live_widths`` masks each row's read at its own block
+    count; ``keys`` are per-request PRNG keys — the sampled token at
+    position p is ``fold_in(key, p)``, so recompute-resume (and swap
+    resume) replay identical samples. ``ctx`` carries calibrated int8
+    ranges as jit closure constants (the W8A8 tick)."""
+
+    def _mixed_step(params, cache, tokens, pos, counts, keys,
+                    live_width, live_widths):
+        last, new_cache = step_rows(
+            params, cfg, cache, tokens, pos, counts,
+            paged_live_width=live_width, paged_live_widths=live_widths,
+            ctx=ctx)
+        nxt = sample_rows(last, gen, keys, pos + counts)
+        return nxt, new_cache
+
+    return jax.jit(_mixed_step, static_argnums=(6,))
+
+
 @partial(jax.jit, static_argnums=(1, 4))
 def _decode_loop(params, cfg: ModelConfig, cache, last_logits,
                  gen: GenerateConfig, pos, key):

@@ -90,11 +90,52 @@ more concurrent rows; serving stays bitwise invariant to chunking, slot
 assignment and preemption-resume because each token is quantized exactly
 once at write (see ``quant.kv_cache``). ``kv_int8=True`` alone (no
 ``qconfig``) is allowed: fp matmuls over a quantized cache.
+
+Robustness layer (SLO-aware scheduling, swapped preemption, degradation —
+see ``docs/serving.md`` "Traffic, SLOs, and failure handling"):
+
+  * ``step(now=...)`` threads a caller-owned clock (the open-loop workload
+    harness in ``serving.workload`` drives a deterministic virtual clock;
+    ``now`` defaults to an internal tick counter). ``Request`` grows
+    ``deadline`` (absolute, same clock) and ``timeout`` (relative to
+    submission): expired/timed-out requests are cancelled the same tick —
+    queued, mid-prefill or decoding — with their blocks released, and land
+    in ``self.failed`` with a status string. Queued requests whose minimum
+    remaining work provably cannot meet their deadline are shed early
+    (``shed_infeasible``), and deadline-bearing requests are admitted and
+    prefill-carved earliest-deadline-first within a priority level.
+    ``prefill_budget`` caps the prefill share of each tick's token budget
+    so a burst of arrivals cannot inflate decode-tick p99.
+  * swapped preemption: with ``swap_break_even_tokens`` set, a preemption
+    victim whose cached context is long copies its live pool blocks (and
+    int8 scale vectors) plus its batch-led row state out to host memory
+    (``SwappedState``) and copies them back in on resume — bit-exact, no
+    recompute. Short victims keep the recompute-resume path: swap cost
+    scales with the row's KV *bytes* (linear in tokens) while recompute
+    re-runs the model over all cached tokens (much more expensive per
+    token), so the bytes-vs-recompute rule reduces to a token threshold.
+    Swap-in is all-or-nothing; after ``swap_retry_limit`` failed attempts
+    (pool pressure or an injected denial) the request degrades to
+    recompute-resume, which can always make incremental progress.
+  * fault tolerance: every block release goes through one audited
+    ``_release_blocks`` helper, ``BlockAllocator.free`` rejects double
+    frees and foreign ids, and ``audit()`` checks the full invariant
+    (every block exactly one of free / owned-by-live-row; tables mirror
+    slot state; swapped requests hold zero device blocks) —
+    ``debug_audit=True`` runs it after every tick. A spurious allocation
+    failure (the allocator denies despite free blocks — ``serving.chaos``
+    injects these) is treated as transient: the tick stalls and retries
+    instead of preempting; once the fault persists past
+    ``fault_shed_after`` ticks the engine degrades by policy, shedding
+    exactly one victim per tick in strict priority order (lowest first,
+    newest arrival among equals). ``on_pool_exhausted="shed"`` converts
+    the one remaining hard failure (a single request larger than the whole
+    pool) into a shed as well.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,12 +150,20 @@ from repro.models.transformer import (
 from repro.quant.int8_weights import attach_int8_weights
 from repro.quant.ptq import calibrate
 from repro.quant.qconfig import NO_QUANT, QConfig
-from repro.serving.decode import GenerateConfig, sample_rows, step_rows
+from repro.serving.decode import GenerateConfig, make_mixed_step
 
 Array = jax.Array
 
 _TABLE_KEY = jax.tree_util.DictKey("block_table")
+_GROUPS_KEY = jax.tree_util.DictKey("groups")
 _RECURRENT_KINDS = ("griffin", "mlstm", "slstm")
+
+
+class AllocatorAuditError(RuntimeError):
+    """A block-accounting invariant was violated (leak, double free,
+    foreign id, stale table mirror). Raised by ``BlockAllocator.free`` and
+    ``ContinuousBatcher.audit`` — the chaos harness asserts this never
+    fires under any fault plan."""
 
 
 @dataclasses.dataclass
@@ -128,8 +177,23 @@ class Request:
     # per-request sampling seed (used when the batcher's GenerateConfig has
     # temperature > 0); None derives a deterministic default from uid
     seed: Optional[int] = None
+    # --- SLOs (see step(now=...): all times share the caller's clock) ---
+    # absolute completion deadline: past it the request is cancelled
+    # ("expired") and its tokens no longer count toward goodput; queued
+    # requests that provably cannot meet it are shed early
+    deadline: Optional[float] = None
+    # relative cap on time since submission ("timeout" when exceeded)
+    timeout: Optional[float] = None
     # filled by the scheduler
     output: Optional[np.ndarray] = None
+    # lifecycle: queued -> running -> done | cancelled | expired | timeout
+    # | shed (failed statuses land the request in batcher.failed)
+    status: str = "queued"
+    submit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # internal: host-side copy-out of a swap-preempted row (swap-resume)
+    swapped: Optional["SwappedState"] = None
     # internal: tokens generated before a preemption (recompute-resume state)
     resume_generated: Optional[List[int]] = None
     # internal: submission sequence number (admission tie-break; a preempted
@@ -161,6 +225,29 @@ class PrefillState:
 
 
 @dataclasses.dataclass
+class SwappedState:
+    """Host-side copy-out of a swap-preempted row's live device state.
+
+    ``pool`` maps cache-leaf paths of the batch-free pool leaves (the K/V
+    block pools and, for int8 KV, their per-slot scale vectors) to the
+    victim's block rows in block-table order; ``row`` maps batch-led leaf
+    paths (ring KV / pos_ids, recurrent h/conv/cell) to the victim's row
+    slice. Together with the slot bookkeeping below, a swap-in restores
+    the row bit-exactly into freshly allocated blocks — no recompute.
+    The copied blocks themselves are FREED at swap-out: a swapped request
+    holds zero device blocks (the allocator audit checks this)."""
+    pool: Dict[Tuple, np.ndarray]
+    row: Dict[Tuple, np.ndarray]
+    n_blocks: int
+    pos: int
+    generated: List[int]
+    prefill: Optional[PrefillState]
+    key: Optional[np.ndarray]
+    nbytes: int
+    attempts: int = 0        # failed swap-in tries (bounded retry)
+
+
+@dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
     pos: int = 0                     # next cache position (= tokens written)
@@ -185,6 +272,7 @@ class BlockAllocator:
     def __init__(self, num_blocks: int) -> None:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
 
     @property
     def available(self) -> int:
@@ -194,10 +282,27 @@ class BlockAllocator:
         """Pop ``n`` blocks, or None (and no side effect) if not enough."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        got = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(got)
+        return got
 
     def free(self, blocks: List[int]) -> None:
-        self._free.extend(blocks)
+        """Return blocks to the free list. Double frees and foreign ids
+        raise ``AllocatorAuditError`` instead of silently corrupting the
+        pool — every release path goes through the scheduler's audited
+        ``_release_blocks``, so a violation here is a real bug."""
+        for b in blocks:
+            if not 0 <= b < self.num_blocks:
+                raise AllocatorAuditError(f"free of foreign block id {b} "
+                                          f"(pool has {self.num_blocks})")
+            if b in self._free_set:
+                raise AllocatorAuditError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+    def free_list(self) -> List[int]:
+        """Snapshot of the free block ids (audit surface)."""
+        return list(self._free)
 
 
 def _table_leaf(leaf, table: Array):
@@ -271,7 +376,15 @@ class ContinuousBatcher:
                  admit_watermark: int = 0,
                  qconfig: Optional[QConfig] = None,
                  kv_int8: Optional[bool] = None,
-                 calib_batches: int = 4) -> None:
+                 calib_batches: int = 4,
+                 prefill_budget: Optional[int] = None,
+                 swap_break_even_tokens: Optional[int] = None,
+                 swap_pool_bytes: Optional[int] = None,
+                 swap_retry_limit: int = 3,
+                 shed_infeasible: bool = True,
+                 fault_shed_after: int = 8,
+                 on_pool_exhausted: str = "raise",
+                 debug_audit: bool = False) -> None:
         # ---- INT8 serving (W8A8 tick + quantized paged KV) -------------
         if kv_int8 is None:
             kv_int8 = qconfig is not None and paged
@@ -309,8 +422,44 @@ class ContinuousBatcher:
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # requests that left the engine without completing: cancelled,
+        # expired (deadline), timeout, or shed (infeasible / persistent
+        # faults / pool exhaustion under on_pool_exhausted="shed")
+        self.failed: List[Request] = []
         self._order = 0
         self._arrival = 0
+        # ---- SLO / robustness knobs ------------------------------------
+        # per-tick cap on PREFILL tokens (None = whole remaining budget):
+        # bounds the mixed tick's size when arrivals burst, protecting
+        # decode-tick p99 at a TTFT cost
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 (or None)")
+        self.prefill_budget = prefill_budget
+        # swap-vs-recompute cost rule threshold (None = swap disabled):
+        # victims with >= this many cached tokens copy out, shorter ones
+        # recompute (see _swap_eligible for the bytes-vs-recompute story)
+        self.swap_break_even_tokens = swap_break_even_tokens
+        self.swap_pool_bytes = swap_pool_bytes   # host swap capacity cap
+        self.swap_retry_limit = swap_retry_limit
+        self.shed_infeasible = shed_infeasible
+        self.fault_shed_after = fault_shed_after
+        if on_pool_exhausted not in ("raise", "shed"):
+            raise ValueError("on_pool_exhausted must be 'raise' or 'shed'")
+        self.on_pool_exhausted = on_pool_exhausted
+        self.debug_audit = debug_audit
+        # caller-owned clock (step(now=...)); defaults to a tick counter
+        self.now = 0.0
+        self._tick_ewma: Optional[float] = None   # est. virtual tick cost
+        self._prev_advanced = False
+        self._alloc_fault = False      # spurious alloc denial seen this tick
+        self._fault_streak = 0         # consecutive faulted no-progress ticks
+        self._swap_bytes = 0           # host bytes currently held by swaps
+        # chaos hook: called before each swap-in; returning False denies it
+        # (counts as a retry attempt -> bounded degradation to recompute)
+        self._swap_in_gate: Optional[Callable[[Request], bool]] = None
+        # total REAL tokens processed by the most recent step() across all
+        # sub-steps — the workload harness's virtual-clock cost input
+        self.last_tick_tokens = 0
         # counts vector of the most recent sub-step (observability + tests:
         # a mixed tick shows >= 2 entries > 1 next to entries == 1)
         self.last_counts: Optional[np.ndarray] = None
@@ -360,28 +509,9 @@ class ContinuousBatcher:
         self._batch_free = jax.tree_util.tree_map(
             lambda a, b: a.shape == b.shape, spec1, spec2)
 
-        gen_cfg = self._gen
-        qctx = self._qctx    # calibrated ranges = jit closure constants
-
-        def _mixed_step(params, cache, tokens, pos, counts, keys,
-                        live_width, live_widths):
-            # one fused step: every runnable row advances at its own
-            # position — decode rows by 1 token, prefill rows by a chunk;
-            # padding tokens' writes are dropped inside model_apply (masked
-            # per-token scatter). ``live_width`` (static) bounds the paged
-            # attention read to the allocated block-table prefix and
-            # ``live_widths`` masks each row's read at its own block count;
-            # ``keys`` are per-request PRNG keys — the sampled token at
-            # position p is fold_in(key, p), so recompute-resume replays
-            # identical samples (see decode.py).
-            last, new_cache = step_rows(
-                params, cfg, cache, tokens, pos, counts,
-                paged_live_width=live_width, paged_live_widths=live_widths,
-                ctx=qctx)
-            nxt = sample_rows(last, gen_cfg, keys, pos + counts)
-            return nxt, new_cache
-
-        self._step_fn = jax.jit(_mixed_step, static_argnums=(6,))
+        # the jitted fused tick lives with the other serving programs in
+        # decode.py; calibrated int8 ranges ride along as closure constants
+        self._step_fn = make_mixed_step(cfg, self._gen, self._qctx)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -406,7 +536,69 @@ class ContinuousBatcher:
         if req.arrival is None:
             req.arrival = self._arrival
             self._arrival += 1
+        if req.submit_time is None:
+            req.submit_time = self.now
+        req.status = "queued"
         self.queue.append(req)
+
+    def cancel(self, uid: int, status: str = "cancelled") -> bool:
+        """Cancel a request by uid — queued, mid-prefill, or decoding —
+        the same tick: its blocks are released immediately, queued prefill
+        chunks are dropped with the cursor, and any generated tokens are
+        delivered as a partial ``output``. Returns False if the uid is not
+        live (already finished or unknown)."""
+        for j, req in enumerate(self.queue):
+            if req.uid == uid:
+                self.queue.pop(j)
+                self._fail(req, status)
+                return True
+        for i, s in enumerate(self.slots):
+            if s.req is not None and s.req.uid == uid:
+                self._evict(i, status)
+                return True
+        return False
+
+    def _fail(self, req: Request, status: str,
+              output: Optional[List[int]] = None) -> None:
+        """Terminal non-success: stamp status/finish time, release any swap
+        bytes, deliver a (possibly partial) output, move to ``failed``."""
+        if req.swapped is not None:
+            self._swap_bytes -= req.swapped.nbytes
+            if output is None and req.swapped.generated:
+                output = req.swapped.generated
+            req.swapped = None
+        if output is None and req.resume_generated:
+            output = req.resume_generated
+        req.output = np.asarray(output if output is not None else [],
+                                np.int32)
+        req.status = status
+        req.finish_time = self.now
+        self.failed.append(req)
+
+    def _evict(self, i: int, status: str) -> None:
+        """Terminally remove slot ``i``'s occupant (cancel/expire/shed):
+        blocks released through the audited path, partial tokens kept."""
+        s = self.slots[i]
+        out = (s.prefill.resume if s.prefill is not None and s.prefill.resume
+               else s.generated)
+        self._release_blocks(i)
+        self._fail(s.req, status, output=list(out))
+        self.slots[i] = _Slot()
+
+    def _release_blocks(self, i: int) -> None:
+        """The ONE path blocks travel back to the free list (retire,
+        preempt, cancel, shed all route here): frees the slot's blocks,
+        clears its table row, marks the device mirror dirty. Keeping a
+        single audited release point is what makes the allocator audit's
+        no-leak/no-double-free invariant cheap to uphold."""
+        s = self.slots[i]
+        if not self.paged:
+            return
+        if s.blocks:
+            self.allocator.free(s.blocks)
+            s.blocks = []
+        self.tables[i] = -1
+        self._tables_dirty = True
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.req is None]
@@ -435,54 +627,212 @@ class ContinuousBatcher:
         self.cache = jax.tree_util.tree_map_with_path(
             pick, self._batch_free, self.cache, self._row_template)
 
+    def _admit_key(self, j: int):
+        """Admission order: priority desc, then earliest deadline first
+        among equals (deadline-free requests sort last within their
+        priority), then arrival — so SLO-bearing traffic is both
+        prioritized by tier and EDF-scheduled inside a tier."""
+        r = self.queue[j]
+        d = r.deadline if r.deadline is not None else float("inf")
+        return (-r.priority, d, r.arrival)
+
     def _admit(self) -> None:
-        """Bind queued requests to free slots in (priority desc, arrival
-        asc) order. Admission does NOT prefill — it resets the slot row and
-        hands the prompt to the chunked tick — so its only gates are a free
-        slot and, in paged mode, the free-block watermark (admission stops
+        """Bind queued requests to free slots in ``_admit_key`` order.
+        Admission does NOT prefill — it resets the slot row and hands the
+        prompt to the chunked tick — so its only gates are a free slot
+        and, in paged mode, the free-block watermark (admission stops
         while ``free_blocks < admit_watermark``, keeping headroom for the
-        rows already decoding instead of thrashing the pool)."""
+        rows already decoding instead of thrashing the pool). A swapped
+        request instead restores its copied-out state into freshly
+        allocated blocks (all-or-nothing); while its swap-in is denied it
+        is deferred for the tick rather than blocking the queue head."""
+        deferred: set = set()
         for i in self._free_slots():
-            if not self.queue:
+            while True:
+                cands = [j for j, r in enumerate(self.queue)
+                         if r.uid not in deferred]
+                if not cands:
+                    return
+                if self.paged and \
+                        self.allocator.available < self.admit_watermark:
+                    return
+                j = min(cands, key=self._admit_key)
+                req = self.queue[j]
+                if req.swapped is not None:
+                    ok = self._try_swap_in(i, j)
+                    if ok is None:       # degraded to recompute: re-pick
+                        continue
+                    if not ok:           # denied this tick: try next cand
+                        deferred.add(req.uid)
+                        continue
+                    break                # restored into slot i
+                self.queue.pop(j)
+                self._bind_slot(i, req)
                 break
-            if self.paged and self.allocator.available < self.admit_watermark:
-                break
-            j = min(range(len(self.queue)),
-                    key=lambda j: (-self.queue[j].priority,
-                                   self.queue[j].arrival))
-            req = self.queue.pop(j)
-            resume = req.resume_generated
-            req.resume_generated = None
-            if resume:
-                feed = np.concatenate(
-                    [np.asarray(req.prompt, np.int32),
-                     np.asarray(resume[:-1], np.int32)])
+
+    def _bind_slot(self, i: int, req: Request) -> None:
+        """Fresh (or recompute-resume) admission into slot ``i``."""
+        resume = req.resume_generated
+        req.resume_generated = None
+        if resume:
+            feed = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(resume[:-1], np.int32)])
+        else:
+            feed = np.asarray(req.prompt, np.int32)
+        self._reset_row(i)
+        key = np.asarray(jax.random.PRNGKey(
+            req.seed if req.seed is not None else req.uid))
+        self.slots[i] = _Slot(
+            req=req, pos=0, generated=[], blocks=[], order=self._order,
+            key=key,
+            prefill=PrefillState(feed=feed,
+                                 resume=list(resume) if resume else None))
+        self._order += 1
+        req.status = "running"
+
+    # ---- swapped preemption ------------------------------------------
+    def _swap_eligible(self, s: _Slot) -> bool:
+        """The bytes-vs-recompute cost rule, reduced to a token threshold:
+        swap-out cost is the row's live KV *bytes* — linear in cached
+        tokens, a pure copy — while recompute-resume re-runs the model
+        over every cached token (attention makes it superlinear, and even
+        the linear term is a full forward per token, orders of magnitude
+        more work per token than a memcpy). Both costs scale with the same
+        token count, so 'swap when bytes beat recompute' is 'swap when
+        the cached context is longer than a break-even token count'."""
+        if self.swap_break_even_tokens is None or not self.paged:
+            return False
+        if s.pos < self.swap_break_even_tokens:
+            return False
+        if self.swap_pool_bytes is not None and \
+                self._swap_bytes >= self.swap_pool_bytes:
+            return False        # host swap pool full: fall back to recompute
+        return True
+
+    def _swap_out(self, i: int) -> SwappedState:
+        """Copy slot ``i``'s live device state to host: its pool blocks
+        (K/V and, for int8 KV, the per-slot scale vectors travel together
+        — a block's scales are meaningless without it) in table order from
+        every batch-free pool leaf, plus its row slice of every batch-led
+        leaf (ring KV/pos_ids, recurrent states). The blocks themselves
+        are released by the caller — a swapped request holds none."""
+        s = self.slots[i]
+        idx = jnp.asarray(s.blocks, jnp.int32)
+        pool: Dict[Tuple, np.ndarray] = {}
+        row: Dict[Tuple, np.ndarray] = {}
+
+        def grab(path, batch_free, leaf):
+            if path and path[-1] == _TABLE_KEY:
+                return
+            ax = 1 if path and path[0] == _GROUPS_KEY else 0
+            if batch_free:
+                pool[path] = np.asarray(jnp.take(leaf, idx, axis=ax))
             else:
-                feed = np.asarray(req.prompt, np.int32)
-            self._reset_row(i)
-            key = np.asarray(jax.random.PRNGKey(
-                req.seed if req.seed is not None else req.uid))
-            self.slots[i] = _Slot(
-                req=req, pos=0, generated=[], blocks=[], order=self._order,
-                key=key,
-                prefill=PrefillState(feed=feed,
-                                     resume=list(resume) if resume else None))
-            self._order += 1
+                row[path] = np.asarray(leaf[(slice(None),) * ax + (i,)])
+
+        jax.tree_util.tree_map_with_path(grab, self._batch_free, self.cache)
+        st = s.prefill
+        nbytes = sum(a.nbytes for a in pool.values()) \
+            + sum(a.nbytes for a in row.values())
+        return SwappedState(
+            pool=pool, row=row, n_blocks=len(s.blocks), pos=s.pos,
+            generated=list(s.generated),
+            prefill=None if st is None else PrefillState(
+                feed=st.feed, done=st.done,
+                resume=list(st.resume) if st.resume else None),
+            key=None if s.key is None else np.array(s.key),
+            nbytes=nbytes)
+
+    def _try_swap_in(self, i: int, j: int) -> Optional[bool]:
+        """Attempt to restore queued request ``j`` into slot ``i``.
+        Returns True on success, False when denied this tick (pool cannot
+        hand out the blocks, or the chaos gate says no — bounded retry),
+        and None when the retry budget is exhausted and the request
+        degraded to recompute-resume (graceful degradation: recompute can
+        always make incremental progress)."""
+        req = self.queue[j]
+        sw = req.swapped
+        denied = self._swap_in_gate is not None and \
+            not self._swap_in_gate(req)
+        blocks = None if denied else self.allocator.alloc(sw.n_blocks)
+        if blocks is None:
+            sw.attempts += 1
+            if sw.attempts > self.swap_retry_limit:
+                self._drop_swap(req)
+                return None
+            return False
+        self.queue.pop(j)
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def put(path, batch_free, leaf):
+            if path and path[-1] == _TABLE_KEY:
+                return leaf
+            ax = 1 if path and path[0] == _GROUPS_KEY else 0
+            if batch_free:
+                sel = (slice(None),) * ax + (idx,)
+                return leaf.at[sel].set(jnp.asarray(sw.pool[path],
+                                                    leaf.dtype))
+            sel = (slice(None),) * ax + (i,)
+            return leaf.at[sel].set(jnp.asarray(sw.row[path], leaf.dtype))
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            put, self._batch_free, self.cache)
+        self.tables[i, :len(blocks)] = blocks
+        self.tables[i, len(blocks):] = -1
+        self._tables_dirty = True
+        self.slots[i] = _Slot(req=req, pos=sw.pos,
+                              generated=list(sw.generated),
+                              blocks=list(blocks), order=self._order,
+                              key=sw.key, prefill=sw.prefill)
+        self._order += 1
+        self._swap_bytes -= sw.nbytes
+        req.swapped = None
+        req.status = "running"
+        return True
+
+    def _drop_swap(self, req: Request) -> None:
+        """Degrade a swapped request to recompute-resume (swap-in kept
+        failing): reconstruct the recompute state from the host copy and
+        release the swap bytes. Outputs stay exact — recompute-resume and
+        swap-resume are bitwise equivalent by construction."""
+        sw = req.swapped
+        req.swapped = None
+        self._swap_bytes -= sw.nbytes
+        if sw.prefill is not None and sw.prefill.resume:
+            req.resume_generated = list(sw.prefill.resume)
+        elif sw.generated:
+            req.resume_generated = list(sw.generated)
 
     def _preempt(self, i: int) -> None:
-        """Evict slot ``i`` for recompute: free its blocks, stash its
-        generated tokens on the request, and re-queue it (the original
-        arrival rank keeps it ahead of later equal-priority arrivals)."""
+        """Evict slot ``i`` on pool pressure and re-queue it (the original
+        arrival rank keeps it ahead of later equal-priority arrivals).
+        Victims past the swap break-even copy their live state out to host
+        (``SwappedState``: resume is a copy-in, no recompute); short
+        victims stash their generated tokens for recompute-resume. Either
+        way the blocks go back through the audited release path."""
         s = self.slots[i]
-        if s.prefill is not None and s.prefill.resume:
-            s.req.resume_generated = list(s.prefill.resume)
+        req = s.req
+        if self._swap_eligible(s):
+            req.swapped = self._swap_out(i)
+            self._swap_bytes += req.swapped.nbytes
+            req.resume_generated = None
+        elif s.prefill is not None and s.prefill.resume:
+            req.resume_generated = list(s.prefill.resume)
         else:
-            s.req.resume_generated = list(s.generated)
-        self.allocator.free(s.blocks)
-        self.tables[i] = -1
-        self._tables_dirty = True
-        self.queue.append(s.req)
+            req.resume_generated = list(s.generated)
+        self._release_blocks(i)
+        req.status = "queued"
+        self.queue.append(req)
         self.slots[i] = _Slot()
+
+    def preempt_slot(self, i: int) -> None:
+        """Force-preempt live slot ``i`` (chaos storms, tests): exactly the
+        pool-pressure eviction path, including the swap-vs-recompute
+        choice."""
+        if self.slots[i].req is None:
+            raise ValueError(f"slot {i} is not occupied")
+        self._preempt(i)
 
     # ------------------------------------------------------------------
     def _grow_blocks(self, i: int, n_tokens: int) -> int:
@@ -493,7 +843,14 @@ class ContinuousBatcher:
         s = self.slots[i]
         need = self._blocks_for(s.pos + n_tokens) - len(s.blocks)
         if need > 0:
-            got = self.allocator.alloc(min(need, self.allocator.available))
+            take = min(need, self.allocator.available)
+            got = self.allocator.alloc(take) if take > 0 else None
+            if take > 0 and got is None:
+                # the allocator denied a request its own 'available' said
+                # it could serve: a transient fault (chaos injection), not
+                # pool pressure — flag it so _plan stalls instead of
+                # preempting (freeing blocks cannot cure a denial)
+                self._alloc_fault = True
             if got:
                 self.tables[i, len(s.blocks):len(s.blocks) + len(got)] = got
                 s.blocks.extend(got)
@@ -505,14 +862,22 @@ class ContinuousBatcher:
         """Carve this sub-step's per-row token counts against the budget,
         allocating paged blocks as needed. Decode rows come first (1 token
         each — inter-token latency is the knob the budget must never
-        starve), then prefill chunks in admission order. If the pool is
-        exhausted and NO row can advance, preempt the most recently
-        admitted stalled row and retry; a single stalled row holding the
-        whole pool means the pool is simply too small for the request."""
+        starve), then prefill chunks: earliest deadline first among
+        deadline-bearing rows, admission order after them, against the
+        smaller of the remaining budget and ``prefill_budget`` (the p99
+        guard: a burst of admissions cannot inflate the tick past the
+        prefill cap). If the pool is exhausted and NO row can advance,
+        preempt the most recently admitted stalled row and retry — unless
+        the failure was a transient allocator fault, which stalls the tick
+        instead (preemption cannot cure a denial). A single stalled row
+        holding the whole pool means the pool is simply too small for the
+        request: raise, or shed it under ``on_pool_exhausted='shed'``."""
         while True:
             counts = np.zeros(self.B, np.int32)
             stalled: List[int] = []
             budget = self.token_budget
+            pleft = self.prefill_budget if self.prefill_budget is not None \
+                else self.token_budget
             if want_decode:
                 for i, s in enumerate(self.slots):
                     if s.req is None or s.prefill is not None:
@@ -523,25 +888,32 @@ class ContinuousBatcher:
                     counts[i] = 1
                     budget -= 1
             if want_prefill:
+                def edf(i):
+                    s = self.slots[i]
+                    d = s.req.deadline if s.req.deadline is not None \
+                        else float("inf")
+                    return (d, s.order)
                 pre = sorted(
                     (i for i, s in enumerate(self.slots)
                      if s.req is not None and s.prefill is not None),
-                    key=lambda i: self.slots[i].order)
+                    key=edf)
                 uniform_c = None
                 if self._uniform and pre:
                     uniform_c = min(min(self.slots[i].prefill.remaining
                                         for i in pre),
-                                    self._chunk_cap, max(budget, 0))
+                                    self._chunk_cap, max(budget, 0),
+                                    max(pleft, 0))
                 for i in pre:
-                    if budget <= 0:
+                    if budget <= 0 or pleft <= 0:
                         break
                     s = self.slots[i]
                     if uniform_c is not None:
-                        if uniform_c > budget:
+                        if uniform_c > min(budget, pleft):
                             break
                         c = uniform_c
                     else:
-                        c = min(s.prefill.remaining, self._chunk_cap, budget)
+                        c = min(s.prefill.remaining, self._chunk_cap,
+                                budget, pleft)
                     if c > 0 and self.paged:
                         c = self._grow_blocks(i, c)
                         if self._uniform and 0 < c < uniform_c:
@@ -553,13 +925,21 @@ class ContinuousBatcher:
                         continue
                     counts[i] = c
                     budget -= c
+                    pleft -= c
             if counts.any() or not stalled:
                 return counts
             if not allow_preempt:
                 return counts
+            if self._alloc_fault:
+                # transient fault: stall the tick and retry next step();
+                # step() bounds the streak with priority-ordered shedding
+                return counts
             occupied = sum(s.req is not None for s in self.slots)
             if occupied == 1:
                 s = self.slots[stalled[0]]
+                if self.on_pool_exhausted == "shed":
+                    self._evict(stalled[0], "shed")
+                    continue
                 raise RuntimeError(
                     f"block pool too small: request uid={s.req.uid} holds "
                     f"{len(s.blocks)}/{self.num_blocks} blocks and still "
@@ -588,11 +968,10 @@ class ContinuousBatcher:
                 s.generated[-1] == self.eos_id
             if out_len >= s.req.max_new_tokens or hit_eos or s.pos >= self.L - 1:
                 s.req.output = np.asarray(s.generated, np.int32)
+                s.req.status = "done"
+                s.req.finish_time = self.now
                 self.done.append(s.req)
-                if self.paged:
-                    self.allocator.free(s.blocks)
-                    self.tables[i] = -1
-                    self._tables_dirty = True
+                self._release_blocks(i)
                 self.slots[i] = _Slot()
 
     def _substep(self, want_decode: bool = True, want_prefill: bool = True,
@@ -639,6 +1018,7 @@ class ContinuousBatcher:
             jnp.asarray(counts), jnp.asarray(keys),
             self._live_width(), live_widths)
         nt = np.asarray(nxt)
+        self.last_tick_tokens += int(counts.sum())
         for i in run:
             s = self.slots[i]
             c = int(counts[i])
@@ -658,13 +1038,141 @@ class ContinuousBatcher:
                     s.generated = list(st.resume) if st.resume \
                         else [int(nt[i])]
                     s.prefill = None
+            if s.generated and s.req.first_token_time is None:
+                s.req.first_token_time = self.now
         return int(run.size)
 
-    def step(self) -> int:
-        """One scheduler tick: retire, admit, run the mixed token-budget
-        step (or the split decode/uniform-prefill sub-steps for recurrent
-        configs), retire again. Returns the number of rows advanced."""
+    # ---- SLO enforcement / degradation -------------------------------
+    def _min_ticks_left(self, req: Request) -> int:
+        """Optimistic lower bound on ticks to finish a QUEUED request:
+        prefill chunks at the full chunk cap plus one decode tick per
+        remaining token. Used only to shed provably-late requests, so it
+        must underestimate, never overestimate."""
+        if req.swapped is not None:
+            sw = req.swapped
+            feed_left = sw.prefill.remaining if sw.prefill is not None else 0
+            dec = max(0, req.max_new_tokens - len(sw.generated))
+        else:
+            resume = req.resume_generated or []
+            feed_left = len(req.prompt) + max(0, len(resume) - 1)
+            dec = max(0, req.max_new_tokens - len(resume))
+        cap = min(self._chunk_cap,
+                  self.prefill_budget or self.token_budget)
+        return -(-feed_left // max(cap, 1)) + dec
+
+    def _enforce_slos(self) -> None:
+        """Same-tick cancellation of requests past their deadline or
+        timeout — queued, mid-prefill or decoding — plus early shedding of
+        queued requests whose optimistic remaining work already overruns
+        their deadline (only once a tick-cost estimate exists)."""
+        now = self.now
+        for req in list(self.queue):
+            late = req.deadline is not None and now > req.deadline
+            timed = req.timeout is not None and req.submit_time is not None \
+                and now - req.submit_time > req.timeout
+            if late or timed:
+                self.queue.remove(req)
+                self._fail(req, "expired" if late else "timeout")
+            elif (self.shed_infeasible and req.deadline is not None
+                  and self._tick_ewma is not None
+                  and now + self._min_ticks_left(req) * self._tick_ewma
+                  > req.deadline):
+                self.queue.remove(req)
+                self._fail(req, "shed")
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            req = s.req
+            late = req.deadline is not None and now > req.deadline
+            timed = req.timeout is not None and req.submit_time is not None \
+                and now - req.submit_time > req.timeout
+            if late or timed:
+                self._evict(i, "expired" if late else "timeout")
+
+    def _shed_one(self) -> None:
+        """Persistent-fault degradation: drop exactly ONE victim, in
+        strict priority order — lowest priority first, newest arrival
+        among equals — preferring queued requests over running rows (a
+        running row may still drain what it holds)."""
+        if self.queue:
+            j = min(range(len(self.queue)),
+                    key=lambda j: (self.queue[j].priority,
+                                   -(self.queue[j].arrival or 0)))
+            req = self.queue.pop(j)
+            self._fail(req, "shed")
+            return
+        live = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if live:
+            i = min(live, key=lambda i: (self.slots[i].req.priority,
+                                         -self.slots[i].order))
+            self._evict(i, "shed")
+
+    def audit(self) -> None:
+        """Block-accounting invariant: every physical block is exactly one
+        of free or owned-by-a-live-row; host block tables mirror slot
+        state; swapped requests hold zero device blocks; swap-byte
+        accounting balances. Raises ``AllocatorAuditError`` on any
+        violation — the chaos harness calls this after every step, and
+        ``debug_audit=True`` makes the engine self-check every tick."""
+        if not self.paged:
+            return
+        owner: Dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                if s.blocks:
+                    raise AllocatorAuditError(
+                        f"empty slot {i} holds blocks {s.blocks}")
+                if not (self.tables[i] == -1).all():
+                    raise AllocatorAuditError(
+                        f"empty slot {i} has stale table entries")
+                continue
+            for b in s.blocks:
+                if b in owner:
+                    raise AllocatorAuditError(
+                        f"block {b} owned by slots {owner[b]} and {i}")
+                owner[b] = i
+            w = len(s.blocks)
+            if list(self.tables[i, :w]) != s.blocks or \
+                    not (self.tables[i, w:] == -1).all():
+                raise AllocatorAuditError(
+                    f"slot {i} table row {self.tables[i].tolist()} does "
+                    f"not mirror its blocks {s.blocks}")
+        free = self.allocator.free_list()
+        seen = sorted(free + list(owner))
+        if seen != list(range(self.num_blocks)):
+            missing = set(range(self.num_blocks)) - set(seen)
+            dups = [b for b in set(seen) if seen.count(b) > 1]
+            raise AllocatorAuditError(
+                f"block accounting broken: leaked={sorted(missing)} "
+                f"duplicated={dups} (free={len(free)} owned={len(owner)} "
+                f"of {self.num_blocks})")
+        swap_bytes = sum(r.swapped.nbytes for r in self.queue
+                         if r.swapped is not None)
+        if swap_bytes != self._swap_bytes:
+            raise AllocatorAuditError(
+                f"swap byte accounting broken: held={self._swap_bytes} "
+                f"but queued swaps sum to {swap_bytes}")
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One scheduler tick: enforce SLOs, retire, admit, run the mixed
+        token-budget step (or the split decode/uniform-prefill sub-steps
+        for recurrent configs), retire again. ``now`` is the caller's
+        clock (virtual or wall — deadlines/timeouts are compared against
+        it); omitted, it advances an internal tick counter by 1. Returns
+        the number of rows advanced (0 = stalled or idle, never an
+        exception under transient faults)."""
+        now = self.now + 1.0 if now is None else float(now)
+        dt = now - self.now
+        if dt > 0 and self._prev_advanced:
+            # per-tick cost estimate for infeasibility shedding; only
+            # ticks that did work count (idle clock jumps would bloat it)
+            self._tick_ewma = dt if self._tick_ewma is None \
+                else 0.8 * self._tick_ewma + 0.2 * dt
+        self.now = now
+        self._alloc_fault = False
+        self.last_tick_tokens = 0
         self._retire()
+        self._enforce_slos()
         self._admit()
         if self._uniform:
             has_pre = any(s.req is not None and s.prefill is not None
@@ -677,6 +1185,18 @@ class ContinuousBatcher:
         else:
             n = self._substep()
         self._retire()
+        self._prev_advanced = n > 0
+        if self._alloc_fault and n == 0:
+            self._fault_streak += 1
+            if self._fault_streak > self.fault_shed_after:
+                # the fault is persistent: degrade by policy instead of
+                # queueing unboundedly — one victim per tick, lowest
+                # priority first
+                self._shed_one()
+        elif not self._alloc_fault:
+            self._fault_streak = 0
+        if self.debug_audit:
+            self.audit()
         return n
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

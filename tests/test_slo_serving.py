@@ -1,0 +1,268 @@
+"""SLO-aware scheduling + swapped preemption: swap-resume bitwise equal to
+recompute-resume (fp and int8-KV), the bytes-vs-recompute cost rule,
+bounded swap-in-denial degradation, mid-prefill cancellation on dense /
+paged / int8-KV backends, and deadline/timeout eviction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import opt_tiny
+from repro.models import model_init
+from repro.serving import (
+    ContinuousBatcher,
+    GenerateConfig,
+    Request,
+    generate,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(max_len=64):
+    cfg = dataclasses.replace(opt_tiny(vocab=64, seq_len=32),
+                              max_seq_len=max_len)
+    return cfg, model_init(KEY, cfg)
+
+
+def _refs(params, cfg, prompts, max_new):
+    return [np.asarray(generate(params, cfg, jnp.asarray(p)[None, :],
+                                GenerateConfig(max_new_tokens=m))[0, len(p):])
+            for p, m in zip(prompts, max_new)]
+
+
+def _prompts(n, size=8, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, 60, size=size).astype(np.int32)
+            for _ in range(n)]
+
+
+def _drain(b, ticks=400):
+    while (b.queue or any(s.req is not None for s in b.slots)) and ticks:
+        b.step()
+        ticks -= 1
+    assert ticks, "engine failed to drain"
+    return {r.uid: r.output for r in b.done}
+
+
+def _preempted_run(params, cfg, prompts, max_new, *, swap, kv_int8=False,
+                   warm_ticks=6):
+    """Run with a forced preemption of slot 0 after ``warm_ticks``; swap
+    on/off toggles the resume mechanism, everything else identical."""
+    b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64, paged=True,
+                          block_size=4, num_blocks=16, kv_int8=kv_int8,
+                          swap_break_even_tokens=0 if swap else None,
+                          debug_audit=True)
+    for u, (p, m) in enumerate(zip(prompts, max_new)):
+        b.submit(Request(uid=u, prompt=p, max_new_tokens=m))
+    for _ in range(warm_ticks):
+        b.step()
+    assert b.slots[0].req is not None
+    victim = b.slots[0].req
+    b.preempt_slot(0)
+    if swap:
+        assert victim.swapped is not None, "cost rule should pick swap"
+    else:
+        assert victim.swapped is None
+    out = _drain(b)
+    assert b.allocator.available == b.num_blocks
+    b.audit()
+    return out
+
+
+class TestSwappedPreemption:
+    def test_swap_resume_bitwise_equals_recompute_fp(self):
+        cfg, params = _setup()
+        prompts, max_new = _prompts(2), [12, 12]
+        refs = _refs(params, cfg, prompts, max_new)
+        swap = _preempted_run(params, cfg, prompts, max_new, swap=True)
+        reco = _preempted_run(params, cfg, prompts, max_new, swap=False)
+        for u in range(2):
+            np.testing.assert_array_equal(swap[u], reco[u], err_msg=f"uid={u}")
+            np.testing.assert_array_equal(swap[u], refs[u], err_msg=f"uid={u}")
+
+    def test_swap_resume_bitwise_equals_recompute_int8(self):
+        """int8-KV: quantize-on-write makes pool bits a pure function of
+        (value, position), so a swapped-out block row must restore
+        bit-identically and the resumed request must emit exactly the
+        tokens of both the recompute path and an unpreempted engine."""
+        cfg, params = _setup()
+        prompts, max_new = _prompts(2, seed=5), [12, 12]
+        swap = _preempted_run(params, cfg, prompts, max_new, swap=True,
+                              kv_int8=True)
+        reco = _preempted_run(params, cfg, prompts, max_new, swap=False,
+                              kv_int8=True)
+        # unpreempted oracle on the same int8 engine
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              paged=True, block_size=4, num_blocks=16,
+                              kv_int8=True)
+        for u, (p, m) in enumerate(zip(prompts, max_new)):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=m))
+        oracle = _drain(b)
+        for u in range(2):
+            np.testing.assert_array_equal(swap[u], reco[u], err_msg=f"uid={u}")
+            np.testing.assert_array_equal(swap[u], oracle[u],
+                                          err_msg=f"uid={u}")
+
+    def test_cost_rule_thresholds_on_cached_tokens(self):
+        """Victims below ``swap_break_even_tokens`` recompute (copying a
+        few blocks costs more than re-prefilling them); above it they
+        swap. Both shapes must resume exactly."""
+        cfg, params = _setup()
+        prompts, max_new = _prompts(2), [12, 12]
+        refs = _refs(params, cfg, prompts, max_new)
+
+        def run(threshold):
+            b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                                  paged=True, block_size=4, num_blocks=16,
+                                  swap_break_even_tokens=threshold,
+                                  debug_audit=True)
+            for u, (p, m) in enumerate(zip(prompts, max_new)):
+                b.submit(Request(uid=u, prompt=p, max_new_tokens=m))
+            for _ in range(4):
+                b.step()
+            victim = b.slots[0].req
+            pos = b.slots[0].pos
+            b.preempt_slot(0)
+            took_swap = victim.swapped is not None  # consumed at swap-in
+            out = _drain(b)
+            return took_swap, pos, out
+
+        swapped_lo, pos, out_lo = run(1)       # pos >= 1 -> swap
+        assert swapped_lo and pos >= 1
+        swapped_hi, _, out_hi = run(10_000)    # pos < 10k -> recompute
+        assert not swapped_hi
+        for u in range(2):
+            np.testing.assert_array_equal(out_lo[u], refs[u])
+            np.testing.assert_array_equal(out_hi[u], refs[u])
+
+    def test_swap_in_denial_degrades_to_recompute(self):
+        """A victim whose swap-in keeps being denied burns its bounded
+        retry budget, drops the host copy, and resumes via recompute —
+        still token-exact, no leak, no livelock."""
+        cfg, params = _setup()
+        prompts, max_new = _prompts(2), [12, 12]
+        refs = _refs(params, cfg, prompts, max_new)
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              paged=True, block_size=4, num_blocks=16,
+                              swap_break_even_tokens=0, swap_retry_limit=2,
+                              debug_audit=True)
+        for u, (p, m) in enumerate(zip(prompts, max_new)):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=m))
+        for _ in range(6):
+            b.step()
+        victim = b.slots[0].req
+        b.preempt_slot(0)
+        assert victim.swapped is not None
+        b._swap_in_gate = lambda req: False     # deny every swap-in
+        for _ in range(8):
+            b.step()
+        assert victim.swapped is None, "retry budget must be bounded"
+        assert b._swap_bytes == 0
+        b._swap_in_gate = None
+        out = _drain(b)
+        for u in range(2):
+            np.testing.assert_array_equal(out[u], refs[u], err_msg=f"uid={u}")
+
+
+class TestMidPrefillCancel:
+    """A request cancelled partway through chunked prefill must free its
+    blocks and drop its remaining chunks the same tick, on every backend,
+    and never perturb its neighbours."""
+
+    def _run(self, kv_int8=False, paged=True):
+        cfg, params = _setup()
+        long_p = _prompts(1, size=24, seed=11)[0]
+        short_p = _prompts(1, size=6, seed=12)[0]
+        (ref,) = _refs(params, cfg, [short_p], [8])
+        kw = dict(batch_size=2, max_len=64, token_budget=8,
+                  debug_audit=paged)
+        if paged:
+            kw.update(paged=True, block_size=4, num_blocks=16,
+                      kv_int8=kv_int8)
+        b = ContinuousBatcher(params, cfg, **kw)
+        b.submit(Request(uid=0, prompt=long_p, max_new_tokens=8))
+        b.submit(Request(uid=1, prompt=short_p, max_new_tokens=8))
+        b.step()     # token_budget=8 < 24: uid0 is now mid-prefill
+        mid = next(s for s in b.slots if s.req is not None
+                   and s.req.uid == 0)
+        assert mid.prefill is not None and mid.prefill.done > 0
+        assert b.cancel(0)
+        # same tick: slot empty, blocks back, tables clear, audit clean
+        assert all(s.req is None or s.req.uid != 0 for s in b.slots)
+        if paged:
+            held = sum(len(s.blocks) for s in b.slots)
+            assert b.allocator.available == b.num_blocks - held
+            b.audit()
+        (cancelled,) = b.failed
+        assert cancelled.uid == 0 and cancelled.status == "cancelled"
+        out = _drain(b)
+        assert 0 not in out
+        np.testing.assert_array_equal(out[1], ref)
+        if paged:
+            assert b.allocator.available == b.num_blocks
+
+    def test_dense(self):
+        self._run(paged=False)
+
+    def test_paged(self):
+        self._run(paged=True)
+
+    def test_paged_int8(self):
+        self._run(paged=True, kv_int8=True)
+
+
+class TestDeadlines:
+    def test_queued_request_expires_before_admission(self):
+        cfg, params = _setup()
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              paged=True, block_size=4, num_blocks=16)
+        b.submit(Request(uid=0, prompt=np.arange(4, 10, dtype=np.int32),
+                         max_new_tokens=4, deadline=0.5))
+        b.step(now=1.0)      # clock already past the deadline
+        assert not b.queue and not b.done
+        (req,) = b.failed
+        assert req.status == "expired" and req.finish_time == 1.0
+
+    def test_running_request_times_out_and_frees_blocks(self):
+        cfg, params = _setup()
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              paged=True, block_size=4, num_blocks=16,
+                              debug_audit=True)
+        b.submit(Request(uid=0, prompt=np.arange(4, 10, dtype=np.int32),
+                         max_new_tokens=500, timeout=2.0))
+        for t in (0.0, 1.0, 2.0, 3.0):
+            b.step(now=t)
+        (req,) = b.failed
+        assert req.status == "timeout"
+        assert len(req.output) > 0          # partial tokens delivered
+        assert b.allocator.available == b.num_blocks
+        b.audit()
+
+    def test_deadline_met_requests_unaffected(self):
+        cfg, params = _setup()
+        prompts, max_new = _prompts(2), [8, 8]
+        refs = _refs(params, cfg, prompts, max_new)
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              paged=True, block_size=4, num_blocks=16)
+        for u, (p, m) in enumerate(zip(prompts, max_new)):
+            b.submit(Request(uid=u, prompt=p, max_new_tokens=m,
+                             deadline=1e9))
+        out = _drain(b)
+        for u in range(2):
+            np.testing.assert_array_equal(out[u], refs[u])
+
+
+class TestPrefillBudget:
+    def test_prefill_budget_caps_prefill_tokens_per_tick(self):
+        cfg, params = _setup()
+        long_p = _prompts(1, size=24, seed=21)[0]
+        b = ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              token_budget=32, prefill_budget=4,
+                              paged=True, block_size=4, num_blocks=16)
+        b.submit(Request(uid=0, prompt=long_p, max_new_tokens=2))
+        b.step()
+        assert b.last_tick_tokens <= 4
+        s = next(s for s in b.slots if s.req is not None)
+        assert s.prefill is not None and s.prefill.done <= 4
