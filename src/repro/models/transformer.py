@@ -693,6 +693,46 @@ def paged_kv_block_bytes(cfg: ModelConfig, block_size: int = 16,
     return 2 * elems * jnp.dtype(dtype).itemsize
 
 
+def copy_pool_blocks(cache: Params, src: Array, dst: Array) -> Params:
+    """Copy physical pool blocks ``src[i] -> dst[i]`` in every paged pool
+    of ``cache`` — K/V blocks and, for int8 KV, their per-slot scale
+    vectors travel together (a block's scales are meaningless without it).
+
+    This is the device half of the scheduler's copy-on-write: when a row
+    must write into a block that other owners (the prefix trie, a
+    sampling-group sibling) still reference, the host remaps the row's
+    table entry to a fresh block and this helper materializes the content
+    copy BEFORE the tick's forward lands any write. Each leaf is one
+    fused gather-then-scatter (``leaf.at[dst].set(leaf[src])`` reads all
+    sources from the pre-copy pool), so a pair whose source block was
+    released and immediately re-allocated as another pair's destination
+    still copies pre-copy content. Block tables and batch-led leaves
+    (ring/recurrent state, dense KV) pass through untouched."""
+    def copy_entry(entry):
+        stacked = entry["block_table"].ndim == 3        # scanned: (G, B, W)
+        out = dict(entry)
+        for name in ("k", "v", "k_scale", "v_scale"):
+            leaf = entry.get(name)
+            if leaf is None:
+                continue
+            if stacked:
+                out[name] = leaf.at[:, dst].set(leaf[:, src])
+            else:
+                out[name] = leaf.at[dst].set(leaf[src])
+        return out
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "block_table" in node:
+                return copy_entry(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(cache)
+
+
 def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
                   pos, ctx: QuantContext) -> Array:
     scale = math.sqrt(cfg.d_model) if cfg.embed_scale else None

@@ -33,6 +33,16 @@ a pure function of (token value, logical position), a swap round-trip is
 bit-identical to never having been preempted — which is what lets
 tests/test_slo_serving.py assert swap-resume == recompute-resume ==
 unpreempted, bitwise, on the int8-KV engine.
+
+Prefix sharing (``serving.prefix_cache``) rides on exactly this choice: a
+cached prompt block can be mapped into ANOTHER request's block table only
+because its int8 bits + per-token scales depend on nothing but the tokens
+and positions the trie keys it by. A scalar per-block scale would have
+made shared blocks owner-history-dependent (whoever wrote last set the
+amax) and copy-on-write divergence lossy; per-slot scales make a shared
+read bitwise-equal to the cold prefill it replaced, and a CoW block copy
+(``models.transformer.copy_pool_blocks``) is exact because the scale
+vector is copied verbatim alongside the int8 payload.
 """
 from __future__ import annotations
 

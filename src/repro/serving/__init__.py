@@ -46,3 +46,6 @@ from repro.serving.chaos import (  # noqa: E402
 )
 
 __all__ += ["ChaosHarness", "FaultPlan", "FaultyAllocator"]
+from repro.serving.prefix_cache import PrefixCache  # noqa: E402
+
+__all__ += ["PrefixCache"]

@@ -31,6 +31,16 @@ Fault taxonomy (matching the scheduler's degradation order):
                       starve higher tiers or corrupt accounting.
   ``swap_deny``       swap-in refusals. Engine retries a bounded number
                       of times then degrades to recompute-resume.
+  ``prefix_storm``    bursts of near-identical prompts (a shared system
+                      prefix + tiny random tails) followed by cancel
+                      bursts of roughly half the storm one tick later —
+                      the hostile pattern for the prefix cache: heavy
+                      trie sharing, refcounts spiking and collapsing,
+                      copy-on-write divergence and LRU eviction all
+                      racing the other faults. The refcount audit
+                      ("every block's refcount equals its owner count
+                      across tables + trie + sampling groups") must hold
+                      after every tick.
 
 Run the seeded smoke (also wired into CI's fast tier)::
 
@@ -57,18 +67,26 @@ class FaultPlan:
     preempt_storm: Tuple[Tuple[int, int], ...] = ()   # (tick, n_victims)
     flood: Tuple[Tuple[int, int], ...] = ()           # (tick, n_junk)
     swap_deny: frozenset = frozenset()      # ticks where swap-in is denied
+    # (tick, n) bursts of near-identical prompts; ~half of each burst is
+    # cancelled one tick later (defaults empty so pre-existing plans are
+    # byte-identical to before this field existed)
+    prefix_storm: Tuple[Tuple[int, int], ...] = ()
 
     @staticmethod
     def random(seed: int, ticks: int = 40,
                p_alloc: float = 0.15, p_storm: float = 0.10,
-               p_flood: float = 0.08, p_deny: float = 0.15) -> "FaultPlan":
+               p_flood: float = 0.08, p_deny: float = 0.15,
+               p_prefix: float = 0.0) -> "FaultPlan":
         """Draw a plan from a seeded RNG. Distinct seeds give distinct
-        plans; the same seed always gives the same plan."""
+        plans; the same seed always gives the same plan (and plans drawn
+        with ``p_prefix=0`` are identical to pre-prefix-storm plans: the
+        extra draw only happens when the probability is nonzero)."""
         rng = np.random.default_rng(seed)
         alloc: Set[int] = set()
         storms: List[Tuple[int, int]] = []
         floods: List[Tuple[int, int]] = []
         deny: Set[int] = set()
+        prefix: List[Tuple[int, int]] = []
         for t in range(ticks):
             r = rng.random(4)
             if r[0] < p_alloc:
@@ -81,11 +99,14 @@ class FaultPlan:
                 floods.append((t, int(rng.integers(1, 4))))
             if r[3] < p_deny:
                 deny.add(t)
+            if p_prefix > 0 and float(rng.random()) < p_prefix:
+                prefix.append((t, int(rng.integers(2, 6))))
         return FaultPlan(seed=seed, ticks=ticks,
                          alloc_fail=frozenset(alloc),
                          preempt_storm=tuple(storms),
                          flood=tuple(floods),
-                         swap_deny=frozenset(deny))
+                         swap_deny=frozenset(deny),
+                         prefix_storm=tuple(prefix))
 
 
 class FaultyAllocator:
@@ -116,6 +137,17 @@ class FaultyAllocator:
     def free(self, blocks) -> None:
         self.inner.free(blocks)
 
+    def acquire(self, blocks) -> None:
+        # reference bumps on live blocks never fail: only fresh
+        # allocation is the flaky resource being modeled
+        self.inner.acquire(blocks)
+
+    def release(self, blocks) -> None:
+        self.inner.release(blocks)
+
+    def refcount(self, block: int) -> int:
+        return self.inner.refcount(block)
+
     def free_list(self):
         return self.inner.free_list()
 
@@ -143,6 +175,14 @@ class ChaosHarness:
             lambda req: self.tick not in self.plan.swap_deny
         self._storms: Dict[int, int] = dict(plan.preempt_storm)
         self._floods: Dict[int, int] = dict(plan.flood)
+        self._prefix_storms: Dict[int, int] = dict(plan.prefix_storm)
+        # one hostile "system prompt" per harness: long enough to span
+        # several blocks so storm prompts share real trie state
+        plen = 3 * batcher.block_size if batcher.paged else 12
+        plen = min(plen, max(1, batcher.L // 2))
+        self._prefix = self.rng.integers(4, vocab, size=plen) \
+            .astype(np.int32)
+        self._cancel_next: List[int] = []   # storm uids due for cancelling
 
     def _storm(self, n: int) -> None:
         live = [i for i, s in enumerate(self.b.slots) if s.req is not None]
@@ -153,6 +193,31 @@ class ChaosHarness:
             self.events.append(f"t{self.tick} preempt slot{i} "
                                f"uid{self.b.slots[i].req.uid}")
             self.b.preempt_slot(i)
+
+    def _prefix_storm_burst(self, n: int) -> None:
+        """Submit ``n`` near-identical prompts (shared prefix + a 0-3
+        token random tail, occasionally n>1 parallel sampling) and queue
+        roughly half of them for a cancel burst next tick — admission
+        sharing, CoW divergence, refcount churn and mid-flight teardown
+        all at once."""
+        burst: List[int] = []
+        for _ in range(n):
+            tail_len = int(self.rng.integers(0, 4))
+            tail = self.rng.integers(4, self.vocab, size=tail_len)
+            prompt = np.concatenate([self._prefix,
+                                     tail.astype(np.int32)])
+            fanout = int(self.rng.integers(1, 3))    # sometimes n=2
+            self.b.submit(Request(uid=self._junk,
+                                  prompt=prompt,
+                                  max_new_tokens=int(self.rng.integers(1, 5)),
+                                  priority=int(self.rng.integers(0, 2)),
+                                  n=fanout))
+            self.events.append(f"t{self.tick} prefix_storm uid{self._junk} "
+                               f"n={fanout}")
+            burst.append(self._junk)
+            self._junk += 1
+        self.rng.shuffle(burst)
+        self._cancel_next.extend(burst[:len(burst) // 2])
 
     def _flood(self, n: int) -> None:
         for _ in range(n):
@@ -169,10 +234,17 @@ class ChaosHarness:
         t = self.tick
         if self.b.paged:
             self.b.allocator.failing = t in self.plan.alloc_fail
+        if self._cancel_next:
+            for uid in self._cancel_next:
+                if self.b.cancel(uid):
+                    self.events.append(f"t{t} cancel uid{uid}")
+            self._cancel_next = []
         if t in self._storms:
             self._storm(self._storms[t])
         if t in self._floods:
             self._flood(self._floods[t])
+        if t in self._prefix_storms:
+            self._prefix_storm_burst(self._prefix_storms[t])
         self.b.step(now=now)
         self.b.audit()
         self.tick += 1
@@ -195,8 +267,10 @@ class ChaosHarness:
 
 
 def _smoke() -> int:
-    """Five seeded plans against a tiny paged int8-KV engine; exits
-    nonzero on any crash, audit violation, or failed drain."""
+    """Six seeded plans against a tiny paged int8-KV engine with the
+    prefix cache live (5 general fault plans + 1 prefix-storm plan);
+    exits nonzero on any crash, refcount-audit violation, or failed
+    drain."""
     import jax
     from repro.models import model_init
     from repro.models.transformer import ModelConfig
@@ -206,13 +280,18 @@ def _smoke() -> int:
                       max_seq_len=64, scan_layers=False, remat=False,
                       mlp_kind="swiglu", norm="rmsnorm")
     params = model_init(jax.random.PRNGKey(0), cfg)
-    for seed in range(5):
-        plan = FaultPlan.random(seed, ticks=30)
+    plans = [FaultPlan.random(seed, ticks=30) for seed in range(5)]
+    # the prefix-cache hostile plan: prompt bursts sharing a system
+    # prefix + cancel bursts, on top of a light dose of the other faults
+    plans.append(FaultPlan.random(5, ticks=30, p_alloc=0.10,
+                                  p_storm=0.08, p_flood=0.05,
+                                  p_deny=0.10, p_prefix=0.35))
+    for seed, plan in enumerate(plans):
         b = ContinuousBatcher(
             params, cfg, batch_size=4, max_len=64, token_budget=48,
             paged=True, num_blocks=24, block_size=8, kv_int8=True,
             swap_break_even_tokens=16, on_pool_exhausted="shed",
-            debug_audit=True)
+            prefix_cache=True, debug_audit=True)
         rng = np.random.default_rng(1234 + seed)
         for uid in range(10):
             plen = int(rng.integers(2, 24))
@@ -223,12 +302,18 @@ def _smoke() -> int:
                 priority=int(rng.integers(0, 3))))
         h = ChaosHarness(b, plan)
         h.run()
-        done = len(b.done)
-        failed = len(b.failed)
-        print(f"plan seed={seed}: done={done} failed={failed} "
+        kind = "prefix-storm" if plan.prefix_storm else "general"
+        print(f"plan seed={seed} ({kind}): done={len(b.done)} "
+              f"failed={len(b.failed)} "
               f"denied_allocs={b.allocator.denied} "
+              f"prefix_hits={b.prefix_cache.hits} "
+              f"cow={b.cow_copies} evictions={b.prefix_cache.evictions} "
               f"events={len(h.events)} audit=clean")
-    print("chaos smoke: 5 plans, zero crashes, zero audit violations")
+        if plan.prefix_storm and b.prefix_cache.hits == 0:
+            print("FAIL: prefix-storm plan produced no trie hits")
+            return 1
+    print("chaos smoke: 6 plans (incl. prefix-storm), zero crashes, "
+          "zero refcount-audit violations")
     return 0
 
 

@@ -131,6 +131,27 @@ see ``docs/serving.md`` "Traffic, SLOs, and failure handling"):
     newest arrival among equals). ``on_pool_exhausted="shed"`` converts
     the one remaining hard failure (a single request larger than the whole
     pool) into a shed as well.
+
+Prefix sharing + parallel sampling (see docs/serving.md "Prefix sharing
+& copy-on-write" and ``serving.prefix_cache``): ``BlockAllocator`` is
+refcounted — blocks are owned, not merely held, and return to the free
+list only at zero owners. ``prefix_cache=True`` (paged, all-attn
+configs) consults a token-ids-keyed trie at admission: a prompt whose
+prefix is cached maps those FULL blocks straight into its table
+(acquiring refs) and prefills only the divergent tail, so cached-prefix
+TTFT collapses to ~one tick; completed prefills publish their prompt
+blocks back, and LRU eviction of sole-owner nodes keeps the cache from
+ever blocking a live allocation. ``Request(n=k)`` admits once and fans
+into k branches (branch i seeded ``base + i``): the leader prefills,
+siblings attach to a snapshot of its prompt blocks at refcount k and
+diverge via copy-on-write — the first write into a still-shared block
+remaps the row to a fresh block with a device-side content copy
+(``copy_pool_blocks``), jitted separately so the decode tick's compile
+budget is untouched. ``audit()``'s invariant generalizes to: every
+block's refcount equals its owner count across slot tables + trie +
+group snapshots. Sharing is bitwise-invisible: KV bits (fp, or int8
+with its per-token scale) are pure functions of (token, position), so a
+shared read equals the cold prefill the sharing replaced.
 """
 from __future__ import annotations
 
@@ -143,6 +164,7 @@ import numpy as np
 
 from repro.models.transformer import (
     ModelConfig,
+    copy_pool_blocks,
     init_cache,
     init_paged_cache,
     model_apply,
@@ -151,6 +173,7 @@ from repro.quant.int8_weights import attach_int8_weights
 from repro.quant.ptq import calibrate
 from repro.quant.qconfig import NO_QUANT, QConfig
 from repro.serving.decode import GenerateConfig, make_mixed_step
+from repro.serving.prefix_cache import PrefixCache
 
 Array = jax.Array
 
@@ -166,7 +189,11 @@ class AllocatorAuditError(RuntimeError):
     fires under any fault plan."""
 
 
-@dataclasses.dataclass
+# eq=False (here and _SampleGroup): live requests are identity objects —
+# parallel-sampling branches share uid AND prompt, so a field-wise ==
+# would compare ndarray prompts and raise instead of answering, breaking
+# list membership (queue, _groups) on the first same-uid pair
+@dataclasses.dataclass(eq=False)
 class Request:
     uid: int
     prompt: np.ndarray               # (T,) int32
@@ -177,6 +204,15 @@ class Request:
     # per-request sampling seed (used when the batcher's GenerateConfig has
     # temperature > 0); None derives a deterministic default from uid
     seed: Optional[int] = None
+    # parallel sampling: n completions of the same prompt. The request
+    # admits once — internally it expands into n branch requests where
+    # branch i samples with seed base+i (base = seed or uid), so the
+    # result is bitwise what n independent Requests with those seeds
+    # would produce; on shareable engines (paged, all-attn) the branches
+    # share the prompt's blocks at refcount n and diverge via
+    # copy-on-write. Results aggregate into ``outputs`` (index order);
+    # ``output`` aliases outputs[0].
+    n: int = 1
     # --- SLOs (see step(now=...): all times share the caller's clock) ---
     # absolute completion deadline: past it the request is cancelled
     # ("expired") and its tokens no longer count toward goodput; queued
@@ -186,6 +222,8 @@ class Request:
     timeout: Optional[float] = None
     # filled by the scheduler
     output: Optional[np.ndarray] = None
+    # parallel sampling (n > 1): per-branch outputs in branch order
+    outputs: Optional[List[np.ndarray]] = None
     # lifecycle: queued -> running -> done | cancelled | expired | timeout
     # | shed (failed statuses land the request in batcher.failed)
     status: str = "queued"
@@ -200,6 +238,40 @@ class Request:
     # request keeps its original arrival, so re-queueing cannot demote it
     # behind later arrivals of the same priority)
     arrival: Optional[int] = None
+    # internal: parallel-sampling bookkeeping (set on the expanded branch
+    # requests, never on the parent the caller submitted)
+    group: Optional["_SampleGroup"] = None
+    branch: int = 0
+
+
+@dataclasses.dataclass(eq=False)
+class _SampleGroup:
+    """Bookkeeping for one ``Request(n=k)`` parallel-sampling group.
+
+    The parent request never enters the queue; it expands into ``n``
+    branch requests sharing its uid. On shareable engines the branches'
+    admission is staged: the LEADER (lowest live branch) prefills the
+    prompt normally; when its prefill completes the group snapshots the
+    prompt's blocks (one extra allocator reference each, ``shared``) and
+    flips ``ready`` — only then do the siblings become admissible, each
+    binding with its position cursor at ``len(prompt) - 1``: it acquires
+    the snapshot blocks, re-feeds just the LAST prompt token (one-token
+    prefill, so its first sample sees the same logits the leader's did),
+    and its first divergent write copy-on-writes the shared tail block.
+    ``unshared`` tracks which branches still get to take the snapshot
+    (one admission each — a preempted branch resumes through the normal
+    recompute/trie path); the snapshot refs drop as soon as every branch
+    has taken (or terminally lost) its turn. Terminal branches collect in
+    ``results``; the last one landing folds the group into the parent."""
+    parent: Request
+    n: int
+    prompt_len: int
+    leader: int = 0
+    ready: bool = False
+    shared: List[int] = dataclasses.field(default_factory=list)
+    unshared: set = dataclasses.field(default_factory=set)
+    branches: List[Request] = dataclasses.field(default_factory=list)
+    results: Dict[int, Request] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -259,46 +331,84 @@ class _Slot:
 
 
 class BlockAllocator:
-    """Host-side free list over the global KV block pool.
+    """Host-side REFCOUNTED free list over the global KV block pool.
 
     Physical block ids are plain ints in [0, num_blocks); the pool tensors
-    live on device, only the *mapping* is host state. A single ``alloc``
-    call is all-or-nothing, but callers may take less than they ultimately
-    want: ``_grow_blocks`` claims ``min(need, available)`` so a prefill
-    chunk shrinks to partial progress instead of stalling — a row CAN hold
-    blocks for writes it has not made yet (they are used on a later tick,
-    or returned wholesale at preemption/retirement)."""
+    live on device, only the *mapping* is host state. Every block carries
+    an ownership count: ``alloc`` hands out blocks at refcount 1,
+    ``acquire`` adds an owner to a live block (prefix-trie publication, a
+    sampling-group snapshot, a row mapping a cached prefix), ``release``
+    drops one — the block returns to the free list only when its LAST
+    owner lets go, which is what makes prefix sharing, copy-on-write
+    divergence and swap-out of shared rows ("copy, don't free, while
+    another owner holds it") all fall out of one rule.
+
+    A single ``alloc`` call is all-or-nothing, but callers may take less
+    than they ultimately want: ``_grow_blocks`` claims
+    ``min(need, available)`` so a prefill chunk shrinks to partial
+    progress instead of stalling — a row CAN hold blocks for writes it
+    has not made yet (they are used on a later tick, or returned
+    wholesale at preemption/retirement)."""
 
     def __init__(self, num_blocks: int) -> None:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
-        self._free_set = set(self._free)
+        self._refs = [0] * num_blocks
 
     @property
     def available(self) -> int:
         return len(self._free)
 
+    def refcount(self, block: int) -> int:
+        """Current owner count of ``block`` (0 = free)."""
+        self._check(block)
+        return self._refs[block]
+
+    def _check(self, b: int) -> None:
+        if not 0 <= b < self.num_blocks:
+            raise AllocatorAuditError(f"foreign block id {b} "
+                                      f"(pool has {self.num_blocks})")
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` blocks, or None (and no side effect) if not enough."""
+        """Pop ``n`` blocks at refcount 1, or None (and no side effect)
+        if not enough are free."""
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
-        self._free_set.difference_update(got)
+        for b in got:
+            self._refs[b] = 1
         return got
 
-    def free(self, blocks: List[int]) -> None:
-        """Return blocks to the free list. Double frees and foreign ids
-        raise ``AllocatorAuditError`` instead of silently corrupting the
-        pool — every release path goes through the scheduler's audited
-        ``_release_blocks``, so a violation here is a real bug."""
+    def acquire(self, blocks: List[int]) -> None:
+        """Add one owner to each (already-live) block. Acquiring a FREE
+        block raises — ownership can only be shared from an existing
+        owner, never conjured."""
         for b in blocks:
-            if not 0 <= b < self.num_blocks:
-                raise AllocatorAuditError(f"free of foreign block id {b} "
-                                          f"(pool has {self.num_blocks})")
-            if b in self._free_set:
+            self._check(b)
+            if self._refs[b] == 0:
+                raise AllocatorAuditError(
+                    f"acquire of free block {b} (no existing owner)")
+            self._refs[b] += 1
+
+    def release(self, blocks: List[int]) -> None:
+        """Drop one owner per block; a block whose count hits zero
+        returns to the free list. Over-release (the refcount edition of a
+        double free) and foreign ids raise ``AllocatorAuditError`` instead
+        of silently corrupting the pool — every release path goes through
+        the scheduler's audited ``_release_blocks`` (or the trie/group
+        teardown, which the audit also counts), so a violation here is a
+        real bug."""
+        for b in blocks:
+            self._check(b)
+            if self._refs[b] == 0:
                 raise AllocatorAuditError(f"double free of block {b}")
-            self._free.append(b)
-            self._free_set.add(b)
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+
+    # historical name: pre-refcount callers (and tests) say "free";
+    # with ownership counts a free is exactly a release
+    free = release
 
     def free_list(self) -> List[int]:
         """Snapshot of the free block ids (audit surface)."""
@@ -384,6 +494,7 @@ class ContinuousBatcher:
                  shed_infeasible: bool = True,
                  fault_shed_after: int = 8,
                  on_pool_exhausted: str = "raise",
+                 prefix_cache: bool = False,
                  debug_audit: bool = False) -> None:
         # ---- INT8 serving (W8A8 tick + quantized paged KV) -------------
         if kv_int8 is None:
@@ -494,6 +605,33 @@ class ContinuousBatcher:
         # mixed steps are not expressible — such configs run split
         # decode/uniform-prefill sub-steps instead (see module docstring)
         self._uniform = any(k in _RECURRENT_KINDS for k in kinds)
+        # ---- prefix sharing / parallel sampling ------------------------
+        # sharing rides on the paged attn pools only: ring (local_attn)
+        # and recurrent layers keep batch-led PER-ROW state that a shared
+        # block cannot carry, so those configs run sampling branches
+        # independently and cannot cache prefixes
+        self._can_share = paged and all(k == "attn" for k in kinds)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not self._can_share:
+                raise ValueError(
+                    "prefix_cache=True requires paged=True and an "
+                    "all-'attn' layer pattern: ring/recurrent layers keep "
+                    "per-row state a shared block cannot carry")
+            self.prefix_cache = PrefixCache(block_size, self.allocator)
+        self._groups: List[_SampleGroup] = []     # live sampling groups
+        # observability: copy-on-write block copies performed, admissions
+        # that mapped a shared prefix, and prompt tokens skipped that way
+        self.cow_copies = 0
+        self.shared_admissions = 0
+        self.shared_tokens = 0
+        if paged:
+            # device half of copy-on-write (see transformer.copy_pool_blocks):
+            # jitted separately from the decode tick so CoW adds zero
+            # specializations to the tick's compile budget; (n,) index pairs
+            # are pow-2 padded by _copy_blocks so this fn compiles O(log B)
+            # times at most
+            self._cow_fn = jax.jit(copy_pool_blocks, donate_argnums=(0,))
         # a prefill chunk on a local_attn layer must fit the ring, and its
         # own writes must not collide inside it
         ring_cap = min(max_len, cfg.window) \
@@ -533,6 +671,11 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request uid={req.uid} needs {self._blocks_for(t + 1)} "
                 f"blocks; the pool only has {self.num_blocks}")
+        if req.n < 1:
+            raise ValueError(f"request uid={req.uid}: n must be >= 1")
+        if req.n > 1 and req.group is None:
+            self._submit_group(req)
+            return
         if req.arrival is None:
             req.arrival = self._arrival
             self._arrival += 1
@@ -541,22 +684,56 @@ class ContinuousBatcher:
         req.status = "queued"
         self.queue.append(req)
 
+    def _submit_group(self, req: Request) -> None:
+        """Expand ``Request(n=k)`` into k branch requests sharing the
+        parent's uid. Branch i samples with seed ``base + i`` (base =
+        the parent's seed, or its uid by default) — exactly the seeds k
+        independent single requests would need to reproduce it, which is
+        what the equivalence tests assert. The parent itself never
+        queues; it lands in done/failed when its last branch does."""
+        g = _SampleGroup(parent=req, n=req.n, prompt_len=len(req.prompt),
+                         unshared=set(range(1, req.n)))
+        base = req.seed if req.seed is not None else req.uid
+        req.status = "queued"
+        if req.submit_time is None:
+            req.submit_time = self.now
+        self._groups.append(g)
+        for i in range(req.n):
+            br = Request(uid=req.uid,
+                         prompt=np.asarray(req.prompt, np.int32).copy(),
+                         max_new_tokens=req.max_new_tokens,
+                         priority=req.priority, seed=base + i,
+                         deadline=req.deadline, timeout=req.timeout,
+                         group=g, branch=i)
+            g.branches.append(br)
+            self.submit(br)
+
     def cancel(self, uid: int, status: str = "cancelled") -> bool:
         """Cancel a request by uid — queued, mid-prefill, or decoding —
         the same tick: its blocks are released immediately, queued prefill
         chunks are dropped with the cursor, and any generated tokens are
-        delivered as a partial ``output``. Returns False if the uid is not
-        live (already finished or unknown)."""
-        for j, req in enumerate(self.queue):
-            if req.uid == uid:
-                self.queue.pop(j)
-                self._fail(req, status)
-                return True
-        for i, s in enumerate(self.slots):
-            if s.req is not None and s.req.uid == uid:
-                self._evict(i, status)
-                return True
-        return False
+        delivered as a partial ``output``. A parallel-sampling request
+        cancels ALL of its branches (they share the parent's uid).
+        Returns False if the uid is not live (already finished or
+        unknown)."""
+        hit = False
+        while True:
+            found = False
+            for j, req in enumerate(self.queue):
+                if req.uid == uid:
+                    self.queue.pop(j)
+                    self._fail(req, status)
+                    hit = found = True
+                    break
+            if found:
+                continue
+            for i, s in enumerate(self.slots):
+                if s.req is not None and s.req.uid == uid:
+                    self._evict(i, status)
+                    hit = found = True
+                    break
+            if not found:
+                return hit
 
     def _fail(self, req: Request, status: str,
               output: Optional[List[int]] = None) -> None:
@@ -573,7 +750,62 @@ class ContinuousBatcher:
                                 np.int32)
         req.status = status
         req.finish_time = self.now
-        self.failed.append(req)
+        self._land(req)
+
+    def _land(self, req: Request) -> None:
+        """Route a terminal request (status already stamped) to
+        done/failed. Parallel-sampling branches aggregate into their
+        parent instead of landing individually: the group's last terminal
+        branch folds all branch outputs into ``parent.outputs`` and lands
+        the PARENT once."""
+        g = req.group
+        if g is None:
+            (self.done if req.status == "done" else self.failed).append(req)
+            return
+        g.results[req.branch] = req
+        if not g.ready and req.branch == g.leader:
+            # the prefilling leader died before publishing the prompt:
+            # promote the next live branch so the group cannot deadlock
+            # (the promoted leader is admissible and prefills cold)
+            live = sorted(br.branch for br in g.branches
+                          if br.branch not in g.results)
+            if live:
+                g.leader = live[0]
+        if req.branch in g.unshared:
+            # a branch that died before taking its snapshot turn
+            g.unshared.discard(req.branch)
+            self._maybe_drop_share(g)
+        if len(g.results) == g.n:
+            self._finalize_group(g)
+
+    def _maybe_drop_share(self, g: _SampleGroup) -> None:
+        """Release the group's prompt-block snapshot once every branch
+        has taken (or terminally lost) its turn against it."""
+        if g.shared and not g.unshared:
+            self.allocator.release(g.shared)
+            g.shared = []
+
+    def _finalize_group(self, g: _SampleGroup) -> None:
+        """All n branches are terminal: fold them into the parent.
+        ``outputs`` keeps branch order; the parent is 'done' only if
+        every branch finished, else it carries the first failing branch's
+        status (individual branch outcomes stay readable per entry)."""
+        if g.shared:
+            self.allocator.release(g.shared)
+            g.shared = []
+        if g in self._groups:
+            self._groups.remove(g)
+        p = g.parent
+        branches = [g.results[i] for i in range(g.n)]
+        p.outputs = [br.output for br in branches]
+        p.output = p.outputs[0]
+        bad = [br.status for br in branches if br.status != "done"]
+        p.status = "done" if not bad else bad[0]
+        fts = [br.first_token_time for br in branches
+               if br.first_token_time is not None]
+        p.first_token_time = min(fts) if fts else None
+        p.finish_time = self.now
+        (self.done if p.status == "done" else self.failed).append(p)
 
     def _evict(self, i: int, status: str) -> None:
         """Terminally remove slot ``i``'s occupant (cancel/expire/shed):
@@ -595,7 +827,7 @@ class ContinuousBatcher:
         if not self.paged:
             return
         if s.blocks:
-            self.allocator.free(s.blocks)
+            self.allocator.release(s.blocks)
             s.blocks = []
         self.tables[i] = -1
         self._tables_dirty = True
@@ -650,11 +882,11 @@ class ContinuousBatcher:
         for i in self._free_slots():
             while True:
                 cands = [j for j, r in enumerate(self.queue)
-                         if r.uid not in deferred]
+                         if id(r) not in deferred and self._admissible(r)]
                 if not cands:
                     return
                 if self.paged and \
-                        self.allocator.available < self.admit_watermark:
+                        self._avail() < self.admit_watermark:
                     return
                 j = min(cands, key=self._admit_key)
                 req = self.queue[j]
@@ -663,12 +895,21 @@ class ContinuousBatcher:
                     if ok is None:       # degraded to recompute: re-pick
                         continue
                     if not ok:           # denied this tick: try next cand
-                        deferred.add(req.uid)
+                        deferred.add(id(req))
                         continue
                     break                # restored into slot i
                 self.queue.pop(j)
                 self._bind_slot(i, req)
                 break
+
+    def _admissible(self, r: Request) -> bool:
+        """Sampling-group siblings wait for their leader's prefill (the
+        shared prompt blocks) on engines that can share; on engines that
+        cannot, the branches are plain independent requests."""
+        g = r.group
+        if g is None or not self._can_share:
+            return True
+        return g.ready or r.branch == g.leader
 
     def _bind_slot(self, i: int, req: Request) -> None:
         """Fresh (or recompute-resume) admission into slot ``i``."""
@@ -690,6 +931,60 @@ class ContinuousBatcher:
                                  resume=list(resume) if resume else None))
         self._order += 1
         req.status = "running"
+        if self.paged:
+            self._attach_prefix(i, resumed=bool(resume))
+
+    def _attach_prefix(self, i: int, resumed: bool) -> None:
+        """Map the longest shareable prefix of slot ``i``'s feed onto
+        EXISTING physical blocks, acquiring one reference per block, and
+        advance the prefill cursor past the whole span — the engine runs
+        zero prefill chunks for it. Two sources, tried in order:
+
+          * sampling-group snapshot (fresh sibling admissions only): the
+            leader's prompt blocks through token ``len(prompt) - 1``; the
+            last prompt token is re-fed as a one-token prefill so the
+            sibling's first sample sees the same logits the leader's did,
+            and its first write (position len(prompt) - 1, inside the
+            shared tail block) triggers copy-on-write;
+          * prefix trie: full cached prompt blocks only (see
+            ``serving.prefix_cache``), so a trie hit starts writing
+            strictly AFTER the shared span and never copies.
+
+        Shared KV reads are bitwise-equal to a cold prefill because KV
+        bits (fp or int8 + per-token scale) are pure functions of (token,
+        position) — the same invariance that already makes chunk size,
+        slot assignment and preemption unobservable. Stale slots past the
+        cursor inside a snapshot tail block are never read: causal
+        masking hides positions > q, and position q itself is rewritten
+        (identically) by the re-fed token's own scatter before use."""
+        s = self.slots[i]
+        req = s.req
+        g = req.group
+        blocks: List[int] = []
+        start = 0
+        if (self._can_share and g is not None and not resumed
+                and req.branch in g.unshared and g.shared):
+            blocks = list(g.shared)
+            start = g.prompt_len - 1
+            self.allocator.acquire(blocks)
+            g.unshared.discard(req.branch)
+            self._maybe_drop_share(g)
+        elif self.prefix_cache is not None:
+            blocks = self.prefix_cache.match(s.prefill.feed)
+            start = len(blocks) * self.block_size
+            if blocks:
+                self.allocator.acquire(blocks)
+        if not blocks or start <= 0:
+            if blocks and start <= 0:    # 1-token prompt: nothing to skip
+                self.allocator.release(blocks)
+            return
+        s.blocks = list(blocks)
+        self.tables[i, :len(blocks)] = blocks
+        self._tables_dirty = True
+        s.pos = start
+        s.prefill.done = start
+        self.shared_admissions += 1
+        self.shared_tokens += start
 
     # ---- swapped preemption ------------------------------------------
     def _swap_eligible(self, s: _Slot) -> bool:
@@ -755,7 +1050,7 @@ class ContinuousBatcher:
         sw = req.swapped
         denied = self._swap_in_gate is not None and \
             not self._swap_in_gate(req)
-        blocks = None if denied else self.allocator.alloc(sw.n_blocks)
+        blocks = None if denied else self._alloc(sw.n_blocks)
         if blocks is None:
             sw.attempts += 1
             if sw.attempts > self.swap_retry_limit:
@@ -835,16 +1130,75 @@ class ContinuousBatcher:
         self._preempt(i)
 
     # ------------------------------------------------------------------
+    def _avail(self) -> int:
+        """Blocks an allocation could obtain right now: the free list
+        plus whatever LRU trie eviction could release. Admission and
+        growth gate on this, not raw ``available`` — the prefix cache
+        must never block a live row."""
+        n = self.allocator.available
+        if self.prefix_cache is not None:
+            n += self.prefix_cache.evictable()
+        return n
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate through LRU trie eviction. Eviction runs only on a
+        GENUINE shortage (``available < n``): a transient fault denial
+        while free blocks exist must NOT flush the cache — the denial
+        path still returns None and the caller's fault handling engages."""
+        if n <= 0:
+            return []
+        if self.prefix_cache is not None and self.allocator.available < n:
+            self.prefix_cache.evict(n - self.allocator.available)
+        return self.allocator.alloc(n)
+
+    def _copy_blocks(self, pairs: List[Tuple[int, int]]) -> None:
+        """Flush copy-on-write block copies device-side, BEFORE any of
+        this tick's forward writes land. Pairs are pow-2 padded by
+        repeating the first pair (a duplicate copy writes the same bytes
+        twice — idempotent), so the jitted copy compiles at most
+        O(log B) times and the decode tick's own compile budget is
+        untouched."""
+        self.cow_copies += len(pairs)
+        n = _bucket(len(pairs))
+        pairs = pairs + [pairs[0]] * (n - len(pairs))
+        src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        self.cache = self._cow_fn(self.cache, src, dst)
+
     def _grow_blocks(self, i: int, n_tokens: int) -> int:
         """Paged: try to grow slot ``i``'s block list to cover its next
         ``n_tokens`` writes; allocates as many of the missing blocks as the
         pool can give. Returns how many of the ``n_tokens`` writes are now
-        covered (possibly 0)."""
+        covered (possibly 0).
+
+        Copy-on-write: if the block the next write lands in is still
+        referenced by another owner (prefix trie, sampling-group snapshot
+        or a sibling row), the row's entry is remapped to a fresh block
+        and the content copied device-side first. Only the entry holding
+        ``pos`` can ever be shared — shared spans sit strictly before the
+        cursor and growth appends fresh blocks — so one check suffices."""
         s = self.slots[i]
+        e = s.pos // self.block_size
+        if e < len(s.blocks) and self.allocator.refcount(s.blocks[e]) > 1:
+            got = self._alloc(1)
+            if got is None:
+                if self.allocator.available >= 1:
+                    # denied despite a free block: transient fault, see below
+                    self._alloc_fault = True
+                return 0
+            old, new = s.blocks[e], got[0]
+            # copy first, then hand back our reference: the copy is
+            # flushed immediately so no later device write (swap-in
+            # restore, this tick's forward) can race it
+            self._copy_blocks([(old, new)])
+            self.allocator.release([old])
+            s.blocks[e] = new
+            self.tables[i, e] = new
+            self._tables_dirty = True
         need = self._blocks_for(s.pos + n_tokens) - len(s.blocks)
         if need > 0:
-            take = min(need, self.allocator.available)
-            got = self.allocator.alloc(take) if take > 0 else None
+            take = min(need, self._avail())
+            got = self._alloc(take) if take > 0 else None
             if take > 0 and got is None:
                 # the allocator denied a request its own 'available' said
                 # it could serve: a transient fault (chaos injection), not
@@ -936,6 +1290,8 @@ class ContinuousBatcher:
                 return counts
             occupied = sum(s.req is not None for s in self.slots)
             if occupied == 1:
+                if self._drop_group_shares():
+                    continue      # snapshot refs released: retry the plan
                 s = self.slots[stalled[0]]
                 if self.on_pool_exhausted == "shed":
                     self._evict(stalled[0], "shed")
@@ -945,6 +1301,21 @@ class ContinuousBatcher:
                     f"{len(s.blocks)}/{self.num_blocks} blocks and still "
                     f"needs more; increase num_blocks")
             self._preempt(max(stalled, key=lambda i: self.slots[i].order))
+
+    def _drop_group_shares(self) -> bool:
+        """Last-resort pool relief when a single row holds everything it
+        can get and still stalls: release every sampling group's prompt
+        snapshot (branches that have not taken their turn will re-prefill
+        via the trie or from scratch — slower, never incorrect). Returns
+        True if anything was released."""
+        hit = False
+        for g in self._groups:
+            if g.shared:
+                self.allocator.release(g.shared)
+                g.shared = []
+                g.unshared.clear()
+                hit = True
+        return hit
 
     def _live_width(self) -> Optional[int]:
         """Static block-table read width for this tick: the max blocks any
@@ -970,8 +1341,8 @@ class ContinuousBatcher:
                 s.req.output = np.asarray(s.generated, np.int32)
                 s.req.status = "done"
                 s.req.finish_time = self.now
-                self.done.append(s.req)
                 self._release_blocks(i)
+                self._land(s.req)
                 self.slots[i] = _Slot()
 
     def _substep(self, want_decode: bool = True, want_prefill: bool = True,
@@ -1038,9 +1409,37 @@ class ContinuousBatcher:
                     s.generated = list(st.resume) if st.resume \
                         else [int(nt[i])]
                     s.prefill = None
+                    self._on_prefill_done(i)
             if s.generated and s.req.first_token_time is None:
                 s.req.first_token_time = self.now
         return int(run.size)
+
+    def _on_prefill_done(self, i: int) -> None:
+        """Prefill-completion hooks for slot ``i``:
+
+          * publish the row's FULL prompt blocks into the prefix trie
+            (insert dedupes, so a trie-hit row republishing its matched
+            span is a no-op and only genuinely new blocks gain a ref);
+          * for a sampling-group leader, snapshot the blocks covering the
+            prompt (one extra ref each) and flip ``ready`` — the siblings
+            become admissible against the snapshot."""
+        s = self.slots[i]
+        req = s.req
+        plen = len(req.prompt)
+        if self.prefix_cache is not None:
+            n_full = plen // self.block_size
+            if n_full > 0:
+                prompt = np.asarray(req.prompt, np.int32)
+                self.prefix_cache.insert(prompt[:n_full * self.block_size],
+                                         s.blocks[:n_full])
+        g = req.group
+        if (g is not None and self._can_share and not g.ready
+                and req.branch == g.leader):
+            g.ready = True
+            if g.unshared:
+                shared = s.blocks[:self._blocks_for(plen)]
+                self.allocator.acquire(shared)
+                g.shared = list(shared)
 
     # ---- SLO enforcement / degradation -------------------------------
     def _min_ticks_left(self, req: Request) -> int:
@@ -1108,15 +1507,19 @@ class ContinuousBatcher:
             self._evict(i, "shed")
 
     def audit(self) -> None:
-        """Block-accounting invariant: every physical block is exactly one
-        of free or owned-by-a-live-row; host block tables mirror slot
-        state; swapped requests hold zero device blocks; swap-byte
-        accounting balances. Raises ``AllocatorAuditError`` on any
-        violation — the chaos harness calls this after every step, and
-        ``debug_audit=True`` makes the engine self-check every tick."""
+        """Block-accounting invariant, refcount edition: every physical
+        block's refcount equals its OWNER COUNT summed across slot block
+        tables, the prefix trie, and sampling-group snapshots — and free
+        blocks are exactly the zero-ref ones. Plus: host tables mirror
+        slot state (a block appears at most once per row), the trie owns
+        each of its blocks once, swapped requests hold zero device
+        blocks, swap-byte accounting balances. Raises
+        ``AllocatorAuditError`` on any violation — the chaos harness
+        calls this after every step, and ``debug_audit=True`` makes the
+        engine self-check every tick."""
         if not self.paged:
             return
-        owner: Dict[int, int] = {}
+        owners: Dict[int, int] = {}
         for i, s in enumerate(self.slots):
             if s.req is None:
                 if s.blocks:
@@ -1126,26 +1529,44 @@ class ContinuousBatcher:
                     raise AllocatorAuditError(
                         f"empty slot {i} has stale table entries")
                 continue
+            row_seen = set()
             for b in s.blocks:
-                if b in owner:
+                if b in row_seen:
                     raise AllocatorAuditError(
-                        f"block {b} owned by slots {owner[b]} and {i}")
-                owner[b] = i
+                        f"slot {i} maps block {b} twice")
+                row_seen.add(b)
+                owners[b] = owners.get(b, 0) + 1
             w = len(s.blocks)
             if list(self.tables[i, :w]) != s.blocks or \
                     not (self.tables[i, w:] == -1).all():
                 raise AllocatorAuditError(
                     f"slot {i} table row {self.tables[i].tolist()} does "
                     f"not mirror its blocks {s.blocks}")
+        if self.prefix_cache is not None:
+            cached = self.prefix_cache.cached_blocks()
+            if len(cached) != len(set(cached)):
+                raise AllocatorAuditError(
+                    "prefix trie owns a block through two nodes")
+            for b in cached:
+                owners[b] = owners.get(b, 0) + 1
+        for g in self._groups:
+            for b in g.shared:
+                owners[b] = owners.get(b, 0) + 1
         free = self.allocator.free_list()
-        seen = sorted(free + list(owner))
-        if seen != list(range(self.num_blocks)):
-            missing = set(range(self.num_blocks)) - set(seen)
-            dups = [b for b in set(seen) if seen.count(b) > 1]
-            raise AllocatorAuditError(
-                f"block accounting broken: leaked={sorted(missing)} "
-                f"duplicated={dups} (free={len(free)} owned={len(owner)} "
-                f"of {self.num_blocks})")
+        if len(free) != len(set(free)):
+            raise AllocatorAuditError("free list repeats a block id")
+        free_set = set(free)
+        for b in range(self.num_blocks):
+            rc = self.allocator.refcount(b)
+            own = owners.get(b, 0)
+            if rc != own:
+                raise AllocatorAuditError(
+                    f"block {b}: refcount {rc} != owner count {own} "
+                    f"(slots + trie + sampling groups)")
+            if (rc == 0) != (b in free_set):
+                raise AllocatorAuditError(
+                    f"block {b}: refcount {rc} inconsistent with free-"
+                    f"list membership {b in free_set}")
         swap_bytes = sum(r.swapped.nbytes for r in self.queue
                          if r.swapped is not None)
         if swap_bytes != self._swap_bytes:

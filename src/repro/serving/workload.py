@@ -85,6 +85,14 @@ class WorkloadConfig:
     out_log_sigma: float = 0.7
     out_max: int = 32
     cancel_frac: float = 0.0       # fraction of requests cancelled mid-SLO
+    # shared-prefix traffic (prefix-cache workloads): with probability
+    # ``prefix_frac`` a request's prompt is one fixed per-trace "system
+    # prompt" of ``prefix_len`` tokens followed by its own drawn body —
+    # the overlap ratio knob the sharing benchmark sweeps. Defaults keep
+    # traces byte-identical to pre-knob seeds (the extra RNG draws only
+    # happen when the knob is on).
+    prefix_len: int = 0
+    prefix_frac: float = 0.0
     tiers: Tuple[TierSpec, ...] = DEFAULT_TIERS
 
 
@@ -119,6 +127,9 @@ def generate_trace(wcfg: WorkloadConfig) -> List[TraceEntry]:
     rng = np.random.default_rng(wcfg.seed)
     w = np.asarray([t.weight for t in wcfg.tiers], np.float64)
     w = w / w.sum()
+    share = wcfg.prefix_len > 0 and wcfg.prefix_frac > 0
+    shared_prefix = rng.integers(4, wcfg.vocab, size=wcfg.prefix_len) \
+        .astype(np.int32) if share else None
     t = 0.0
     entries: List[TraceEntry] = []
     for uid in range(wcfg.n_requests):
@@ -129,6 +140,8 @@ def generate_trace(wcfg: WorkloadConfig) -> List[TraceEntry]:
         olen = _clipped_lognormal(rng, wcfg.out_log_mu,
                                   wcfg.out_log_sigma, wcfg.out_max)
         prompt = rng.integers(4, wcfg.vocab, size=plen).astype(np.int32)
+        if share and float(rng.random()) < wcfg.prefix_frac:
+            prompt = np.concatenate([shared_prefix, prompt])
         deadline = t + tier.ttft_slo + olen * tier.tpot_slo
         cancel_at = None
         if wcfg.cancel_frac > 0 and float(rng.random()) < wcfg.cancel_frac:

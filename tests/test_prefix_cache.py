@@ -1,0 +1,430 @@
+"""Prefix cache subsystem: refcounted allocator semantics, trie
+match/insert/LRU-evict, bitwise equality of shared-prefix admission vs
+cold admission (fp and int8-KV, incl. preempt-swap-resume of a row
+holding shared blocks), cached-prefix TTFT of one tick with zero prefill
+chunks for the shared span, LRU eviction never blocking admission, and
+``Request(n=...)`` parallel sampling matching n independent requests
+with the same seeds on dense/paged × fp/int8-KV engines — with the
+refcount audit live (``debug_audit=True``) throughout."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import opt_tiny
+from repro.models import model_init
+from repro.serving import (
+    AllocatorAuditError,
+    BlockAllocator,
+    ContinuousBatcher,
+    GenerateConfig,
+    PrefixCache,
+    Request,
+)
+
+KEY = jax.random.PRNGKey(0)
+BS = 8                                   # block size used across the file
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(opt_tiny(vocab=64, seq_len=32),
+                              max_seq_len=64)
+    return cfg, model_init(KEY, cfg)
+
+
+def _engine(setup, **kw):
+    cfg, params = setup
+    base = dict(batch_size=4, max_len=64, token_budget=48, paged=True,
+                block_size=BS, num_blocks=32, prefix_cache=True,
+                debug_audit=True)
+    base.update(kw)
+    return ContinuousBatcher(params, cfg, **base)
+
+
+def _prompt(n, lo=4):
+    return (np.arange(n) % 50 + lo).astype(np.int32)
+
+
+def _drain(b, max_ticks=500):
+    ticks = 0
+    while b.queue or any(s.req is not None for s in b.slots):
+        b.step()
+        ticks += 1
+        assert ticks < max_ticks
+    return ticks
+
+
+# ---------------------------------------------------------------------------
+class TestAllocatorRefcounts:
+    def test_alloc_acquire_release_cycle(self):
+        a = BlockAllocator(4)
+        got = a.alloc(2)
+        assert sorted(a.refcount(b) for b in got) == [1, 1]
+        a.acquire(got)                   # second owner
+        assert all(a.refcount(b) == 2 for b in got)
+        a.release(got)                   # first owner lets go: still live
+        assert a.available == 2
+        assert all(a.refcount(b) == 1 for b in got)
+        a.release(got)                   # last owner: back on the free list
+        assert a.available == 4
+        assert all(a.refcount(b) == 0 for b in got)
+
+    def test_release_of_free_block_raises(self):
+        a = BlockAllocator(2)
+        got = a.alloc(1)
+        a.release(got)
+        with pytest.raises(AllocatorAuditError, match="double free"):
+            a.release(got)
+
+    def test_acquire_of_free_block_raises(self):
+        a = BlockAllocator(2)
+        with pytest.raises(AllocatorAuditError, match="no existing owner"):
+            a.acquire([0])
+
+    def test_foreign_ids_raise(self):
+        a = BlockAllocator(2)
+        with pytest.raises(AllocatorAuditError, match="foreign"):
+            a.release([7])
+        with pytest.raises(AllocatorAuditError, match="foreign"):
+            a.refcount(-1)
+
+    def test_free_is_release_alias(self):
+        a = BlockAllocator(2)
+        got = a.alloc(2)
+        a.acquire([got[0]])
+        a.free(got)                      # drops one owner each
+        assert a.refcount(got[0]) == 1 and a.refcount(got[1]) == 0
+        assert a.available == 1
+
+
+# ---------------------------------------------------------------------------
+class TestPrefixTrie:
+    def _cache(self, nb=16):
+        alloc = BlockAllocator(nb)
+        return PrefixCache(BS, alloc), alloc
+
+    def test_insert_match_roundtrip_full_blocks_only(self):
+        pc, alloc = self._cache()
+        toks = _prompt(2 * BS + 3)       # 2 full blocks + partial tail
+        mine = alloc.alloc(3)
+        pc.insert(toks, mine)            # only the 2 full blocks cache
+        assert len(pc) == 2
+        assert pc.match(toks) == mine[:2]
+        assert pc.tokens_reused == 2 * BS
+        # trie holds one ref per node on top of the row's own
+        assert alloc.refcount(mine[0]) == 2
+        assert alloc.refcount(mine[2]) == 1   # partial block never cached
+
+    def test_match_leaves_at_least_one_token_to_prefill(self):
+        pc, alloc = self._cache()
+        toks = _prompt(2 * BS)           # exactly 2 blocks
+        mine = alloc.alloc(2)
+        pc.insert(toks, mine)
+        # a feed of exactly the cached tokens may only map ONE block:
+        # the last token must run through the model for its logits
+        assert pc.match(toks) == mine[:1]
+        assert pc.match(_prompt(2 * BS + 1)) == mine[:2]
+
+    def test_reinsert_dedupes_without_extra_refs(self):
+        pc, alloc = self._cache()
+        toks = _prompt(BS)
+        first = alloc.alloc(1)
+        pc.insert(toks, first)
+        second = alloc.alloc(1)          # a concurrent cold prefill's block
+        added = pc.insert(toks, second)
+        assert added == 0 and len(pc) == 1
+        assert alloc.refcount(first[0]) == 2    # row + trie
+        assert alloc.refcount(second[0]) == 1   # stays private to its row
+
+    def test_lru_eviction_prefers_untouched_chain(self):
+        pc, alloc = self._cache()
+        a, b = _prompt(BS, lo=4), _prompt(BS, lo=5)
+        blk_a, blk_b = alloc.alloc(1), alloc.alloc(1)
+        pc.insert(a, blk_a)
+        pc.insert(b, blk_b)
+        alloc.release(blk_a)             # trie becomes sole owner of both
+        alloc.release(blk_b)
+        pc.match(np.concatenate([a, a[:1]]))    # touch chain a
+        assert pc.evict(1) == 1
+        assert alloc.refcount(blk_b[0]) == 0    # LRU victim was b
+        assert alloc.refcount(blk_a[0]) == 1
+
+    def test_children_evict_before_parents(self):
+        pc, alloc = self._cache()
+        toks = _prompt(3 * BS)
+        mine = alloc.alloc(3)
+        pc.insert(toks, mine)
+        alloc.release(mine)              # trie sole owner of the chain
+        pc.evict(1)
+        # deepest node went first; the prefix above it still matches
+        assert alloc.refcount(mine[2]) == 0
+        assert pc.match(_prompt(3 * BS + 1)) == mine[:2]
+
+    def test_evict_skips_blocks_live_rows_still_hold(self):
+        pc, alloc = self._cache()
+        toks = _prompt(BS)
+        mine = alloc.alloc(1)
+        pc.insert(toks, mine)            # refcount 2: row + trie
+        assert pc.evictable() == 0
+        assert pc.evict(5) == 0          # freeing nothing frees no memory
+        alloc.release(mine)
+        assert pc.evictable() == 1
+        assert pc.evict(5) == 1
+        assert alloc.available == alloc.num_blocks
+
+
+# ---------------------------------------------------------------------------
+class TestSharedPrefixBitwise:
+    @pytest.mark.parametrize("kv_int8", [False, True])
+    def test_warm_equals_cold(self, setup, kv_int8):
+        """A second admission of the same prompt maps the cached blocks
+        and produces the cold admission's exact tokens (fp and int8-KV);
+        both match a dense engine's output for the same request."""
+        b = _engine(setup, kv_int8=kv_int8)
+        p = _prompt(2 * BS + 5)
+        b.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=6))
+        _drain(b)
+        assert b.prefix_cache.hits == 0 and len(b.prefix_cache) == 2
+        b.submit(Request(uid=1, prompt=p.copy(), max_new_tokens=6))
+        _drain(b)
+        assert b.prefix_cache.hits == 1
+        assert b.shared_tokens == 2 * BS
+        cold, warm = b.done[0].output, b.done[1].output
+        np.testing.assert_array_equal(cold, warm)
+        if not kv_int8:
+            d = _engine(setup, paged=False, prefix_cache=False)
+            d.submit(Request(uid=2, prompt=p.copy(), max_new_tokens=6))
+            _drain(d)
+            np.testing.assert_array_equal(cold, d.done[0].output)
+
+    def test_divergent_tail_only_prefills_the_tail(self, setup):
+        """Prompts sharing 2 blocks then diverging reuse exactly the
+        shared span and still match their own cold outputs."""
+        b = _engine(setup)
+        head = _prompt(2 * BS)
+        pa = np.concatenate([head, _prompt(5, lo=20)])
+        pb = np.concatenate([head, _prompt(7, lo=40)])
+        b.submit(Request(uid=0, prompt=pa.copy(), max_new_tokens=5))
+        _drain(b)
+        b.submit(Request(uid=1, prompt=pb.copy(), max_new_tokens=5))
+        _drain(b)
+        assert b.prefix_cache.tokens_reused == 2 * BS
+        cold = _engine(setup, prefix_cache=False)
+        cold.submit(Request(uid=1, prompt=pb.copy(), max_new_tokens=5))
+        _drain(cold)
+        np.testing.assert_array_equal(b.done[1].output, cold.done[0].output)
+
+    def test_cached_prompt_first_token_in_one_tick(self, setup):
+        """A fully cached prompt runs ZERO prefill chunks for the shared
+        span: one tick feeds the single remaining token and samples the
+        first output token."""
+        b = _engine(setup, prefill_chunk=BS)
+        p = _prompt(3 * BS)              # block-aligned, 24 tokens
+        b.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=4))
+        cold_ticks_to_first = 0
+        while not any(s.generated for s in b.slots):
+            b.step()
+            cold_ticks_to_first += 1
+        assert cold_ticks_to_first == 3  # 24 tokens at 8/chunk
+        _drain(b)
+        b.submit(Request(uid=1, prompt=p.copy(), max_new_tokens=4))
+        b.step()
+        # after ONE tick the warm request has its first token: the match
+        # is capped at 2 blocks ((24 - 1) // 8), so the tick fed exactly
+        # the BS-token uncached tail — zero chunks for the shared span
+        i, warm = next((i, s) for i, s in enumerate(b.slots)
+                       if s.req is not None)
+        assert warm.req.uid == 1
+        assert warm.prefill is None and len(warm.generated) == 1
+        assert warm.req.first_token_time is not None
+        assert int(b.last_counts[i]) == BS
+        _drain(b)
+        np.testing.assert_array_equal(b.done[0].output, b.done[1].output)
+
+    def test_preempt_swap_resume_row_holding_shared_blocks(self, setup):
+        """Swap-preempting a row whose table maps trie-shared blocks
+        copies them out rather than freeing them (the trie still owns
+        them) and the resume is bitwise-exact."""
+        b = _engine(setup, swap_break_even_tokens=4, batch_size=2)
+        p = _prompt(2 * BS + 3)
+        b.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=8))
+        _drain(b)
+        expect = b.done[0].output
+        b.submit(Request(uid=1, prompt=p.copy(), max_new_tokens=8))
+        for _ in range(3):               # bind (shared) + a couple decodes
+            b.step()
+        i = next(i for i, s in enumerate(b.slots)
+                 if s.req is not None and s.req.uid == 1)
+        shared = [blk for blk in b.slots[i].blocks
+                  if b.allocator.refcount(blk) > 1]
+        assert shared, "victim should be holding trie-shared blocks"
+        b.preempt_slot(i)
+        assert b.queue and b.queue[0].swapped is not None
+        b.audit()
+        # copied-not-freed: the trie still owns the shared blocks
+        assert all(b.allocator.refcount(blk) == 1 for blk in shared)
+        _drain(b)
+        np.testing.assert_array_equal(b.done[1].output, expect)
+
+    def test_eviction_never_blocks_admission(self, setup):
+        """With the pool nearly all cached, a request needing more blocks
+        than are free LRU-evicts cached prefixes and completes."""
+        b = _engine(setup, num_blocks=6, batch_size=1, max_len=48)
+        b.submit(Request(uid=0, prompt=_prompt(2 * BS + 1),
+                         max_new_tokens=2))
+        _drain(b)
+        assert len(b.prefix_cache) == 2
+        assert b.allocator.available == 4
+        big = (np.arange(4 * BS + 1) % 40 + 10).astype(np.int32)
+        b.submit(Request(uid=1, prompt=big, max_new_tokens=2))
+        _drain(b)
+        assert b.done[1].status == "done"
+        assert b.prefix_cache.evictions >= 1
+        b.audit()
+
+    def test_transient_fault_does_not_flush_cache(self, setup):
+        """An allocator denial while blocks are genuinely free must stall
+        — not evict cached prefixes (the chaos contract)."""
+        from repro.serving import FaultyAllocator
+        b = _engine(setup)
+        b.submit(Request(uid=0, prompt=_prompt(2 * BS + 1),
+                         max_new_tokens=2))
+        _drain(b)
+        cached = len(b.prefix_cache)
+        assert cached == 2
+        b.allocator = FaultyAllocator(b.allocator)
+        if b.prefix_cache is not None:
+            b.prefix_cache.allocator = b.allocator
+        b.allocator.failing = True
+        b.submit(Request(uid=1, prompt=_prompt(3 * BS, lo=30),
+                         max_new_tokens=2))
+        for _ in range(3):
+            b.step()                     # stalls, sheds nothing, evicts nothing
+        assert len(b.prefix_cache) == cached
+        b.allocator.failing = False
+        _drain(b)
+        assert b.done[1].status == "done"
+
+
+# ---------------------------------------------------------------------------
+class TestParallelSampling:
+    GEN = GenerateConfig(temperature=0.8, top_k=8)
+
+    def _independent(self, setup, p, n, base_seed, m=6, **kw):
+        b = _engine(setup, gen=self.GEN, **kw)
+        for i in range(n):
+            b.submit(Request(uid=100 + i, prompt=p.copy(),
+                             max_new_tokens=m, seed=base_seed + i))
+        _drain(b)
+        return {r.uid: r.output for r in b.done}
+
+    @pytest.mark.parametrize("kv_int8", [False, True])
+    def test_n_matches_independent_paged(self, setup, kv_int8):
+        p = _prompt(2 * BS + 3)
+        b = _engine(setup, gen=self.GEN, kv_int8=kv_int8)
+        b.submit(Request(uid=7, prompt=p.copy(), max_new_tokens=6,
+                         seed=42, n=3))
+        _drain(b)
+        parent = b.done[0]
+        assert parent.status == "done" and len(parent.outputs) == 3
+        assert b.cow_copies >= 1         # siblings diverged via CoW
+        ind = self._independent(setup, p, 3, 42, kv_int8=kv_int8)
+        for i in range(3):
+            np.testing.assert_array_equal(parent.outputs[i], ind[100 + i])
+        assert b.allocator.available == b.num_blocks - len(b.prefix_cache)
+
+    def test_n_matches_independent_dense(self, setup):
+        """Engines that cannot share (dense) run branches independently
+        and still reproduce n independent requests exactly."""
+        p = _prompt(11)
+        b = _engine(setup, gen=self.GEN, paged=False, prefix_cache=False)
+        b.submit(Request(uid=7, prompt=p.copy(), max_new_tokens=5,
+                         seed=9, n=3))
+        _drain(b)
+        parent = b.done[0]
+        ind = self._independent(setup, p, 3, 9, m=5, paged=False,
+                                prefix_cache=False)
+        for i in range(3):
+            np.testing.assert_array_equal(parent.outputs[i], ind[100 + i])
+
+    def test_default_seed_derives_from_uid(self, setup):
+        """Without an explicit seed, branch i uses uid + i — the same
+        rule independent requests with those seeds would need."""
+        p = _prompt(BS + 2)
+        b = _engine(setup, gen=self.GEN)
+        b.submit(Request(uid=31, prompt=p.copy(), max_new_tokens=4, n=2))
+        _drain(b)
+        ind = self._independent(setup, p, 2, 31, m=4)
+        for i in range(2):
+            np.testing.assert_array_equal(b.done[0].outputs[i],
+                                          ind[100 + i])
+
+    def test_greedy_branches_agree(self, setup):
+        """Greedy sampling is seed-independent: all branches must emit
+        the single greedy continuation (the strongest internal
+        consistency check on shared-prompt divergence)."""
+        b = _engine(setup)
+        p = _prompt(2 * BS + 1)
+        b.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=6, n=3))
+        _drain(b)
+        outs = b.done[0].outputs
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_cancel_cancels_every_branch(self, setup):
+        b = _engine(setup, gen=self.GEN)
+        p = _prompt(2 * BS + 3)
+        b.submit(Request(uid=5, prompt=p.copy(), max_new_tokens=20,
+                         seed=1, n=3))
+        for _ in range(4):
+            b.step()
+        assert b.cancel(5)
+        assert b.done == []
+        parent = b.failed[-1]
+        assert parent.uid == 5 and parent.status == "cancelled"
+        assert len(parent.outputs) == 3
+        b.audit()
+        _drain(b)
+        assert b.allocator.available == b.num_blocks - len(b.prefix_cache)
+
+    def test_leader_promotion_on_branch_failure(self, setup):
+        """If branches die while the group is mid-flight the rest still
+        land and the parent aggregates the failure."""
+        b = _engine(setup, gen=self.GEN)
+        p = _prompt(BS + 4)
+        b.submit(Request(uid=5, prompt=p.copy(), max_new_tokens=4,
+                         seed=1, n=3))
+        # kill a queued sibling before the leader publishes
+        assert len(b.queue) == 3
+        victim = b.queue.pop(-1)
+        assert victim.branch == 2
+        b._fail(victim, "shed")
+        _drain(b)
+        parent = b.failed[-1]
+        assert parent.status == "shed"       # one branch failed
+        assert len(parent.outputs) == 3
+        # surviving branches still produced their exact continuations
+        ind = self._independent(setup, p, 2, 1, m=4)
+        np.testing.assert_array_equal(parent.outputs[0], ind[100])
+        np.testing.assert_array_equal(parent.outputs[1], ind[101])
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.compile_budget(10)
+def test_cow_adds_one_specialization_at_most(setup):
+    """Copy-on-write is jitted separately from the decode tick with pow-2
+    padded pair counts: a run with many CoW events stays inside the same
+    compile envelope as the tick sweep budget plus ONE copy variant."""
+    cfg, params = setup
+    b = ContinuousBatcher(params, cfg, batch_size=4, max_len=64,
+                          paged=True, block_size=BS, num_blocks=32,
+                          prefix_cache=True, debug_audit=True,
+                          gen=GenerateConfig(temperature=0.7, top_k=8))
+    p = _prompt(2 * BS + 3)
+    b.submit(Request(uid=0, prompt=p.copy(), max_new_tokens=4, seed=3, n=3))
+    _drain(b)
+    b.submit(Request(uid=1, prompt=p.copy(), max_new_tokens=4, seed=5, n=2))
+    _drain(b)
+    assert b.cow_copies >= 3
