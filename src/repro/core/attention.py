@@ -36,6 +36,15 @@ position or a per-row ``(B,)`` int32 vector. With a vector, masks acquire a
 leading batch dimension ``(B, Tq, Tk)`` and every row attends at its own
 absolute position; this is what lets the continuous batcher decode a batch
 whose rows sit at unrelated sequence positions in ONE fused step.
+
+Both paged backends already accept Tq > 1 query blocks per row, which is
+the read half of speculative decoding: a verifying tick reads k+1 query
+positions against the row's whole cached prefix in one paged read. The
+causal mask over LOGICAL positions is what makes that sound — any
+stale entry a rejected draft left at position p is invisible to every
+query with q_pos < p, and by the time a query reaches p the entry has
+been rewritten (bit-identically) by the token actually banked there.
+See ``serving.decode.make_spec_step`` for the full argument.
 """
 from __future__ import annotations
 

@@ -322,6 +322,16 @@ def _attn_block_apply(
             # Unallocated targets (table entry -1) and inactive tokens are
             # redirected out of bounds and dropped, the same masked-scatter
             # convention as the dense per-row path below.
+            # Speculative decoding leans on a second property of this
+            # scatter: a REJECTED draft token's write (an active token the
+            # scheduler later declines to bank) is harmless, because reads
+            # mask keys by logical position (> q is invisible) and the
+            # row's next writes at those same (phys, slot) targets replace
+            # the entry — with identical bits, since stored KV (incl. the
+            # fused int8 quantize below) is a pure function of
+            # (token value, logical position). Ring and recurrent caches
+            # lack this replay property, so the scheduler refuses spec
+            # there.
             nb, bs = cache["k"].shape[0], cache["k"].shape[1]
             table = cache["block_table"]                         # (B, W)
             tpos = jnp.broadcast_to(_positions(pos, t), (b, t))  # logical

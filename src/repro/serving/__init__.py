@@ -6,14 +6,21 @@ from repro.serving.decode import (
     prefill,
     sample_logits,
     sample_rows,
+    sample_rows_all,
     sample_token_at,
     make_mixed_step,
+    make_spec_step,
     step_rows,
+    step_rows_full,
 )
 
 __all__ = ["GenerateConfig", "chunked_prefill", "decode_one", "generate",
-           "prefill", "sample_logits", "sample_rows", "sample_token_at",
-           "make_mixed_step", "step_rows"]
+           "prefill", "sample_logits", "sample_rows", "sample_rows_all",
+           "sample_token_at", "make_mixed_step", "make_spec_step",
+           "step_rows", "step_rows_full"]
+from repro.serving.speculate import NGramDrafter, SpecConfig  # noqa: E402
+
+__all__ += ["NGramDrafter", "SpecConfig"]
 from repro.serving.scheduler import (  # noqa: E402
     AllocatorAuditError,
     BlockAllocator,

@@ -93,6 +93,28 @@ def sample_rows(logits: Array, gen: GenerateConfig, keys: Array,
         logits, keys, target_pos)
 
 
+def sample_rows_all(logits: Array, gen: GenerateConfig, keys: Array,
+                    pos: Array) -> Array:
+    """Every-position sampler for the speculative tick: (B, T, vocab)
+    logits, (B, 2) uint32 keys, (B,) row start positions -> (B, T) int32.
+
+    Entry ``[b, j]`` is the token plain decoding would place at absolute
+    position ``pos[b] + j + 1``, sampled from ``logits[b, j]`` under the
+    position-keyed rule (``fold_in(key_b, pos_b + j + 1)``; greedy is
+    argmax). The verifier's accept test compares draft tokens against
+    these entries, so speculation inherits bitwise equality with plain
+    decoding from the same invariance that makes chunked prefill and
+    recompute-resume exact. Padding positions (j >= the row's real token
+    count) produce garbage entries the host never reads."""
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = logits.shape[1]
+    tpos = pos[:, None] + 1 + jnp.arange(t, dtype=jnp.int32)[None, :]
+    per_row = jax.vmap(lambda l, k, p: sample_token_at(l, gen, k, p),
+                       in_axes=(0, None, 0))
+    return jax.vmap(per_row)(logits, keys, tpos)
+
+
 def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
     """Run the prompt through the model, building the KV cache.
 
@@ -169,6 +191,28 @@ def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
     ``ctx``: optional QuantContext in 'int8' mode — the W8A8 serving path.
     Its calibrated ranges are python-float closure constants, so the tick
     stays jit-safe; the context is captured, not traced."""
+    logits, cache = step_rows_full(
+        params, cfg, cache, tokens, pos, counts,
+        paged_live_width=paged_live_width,
+        paged_live_widths=paged_live_widths, ctx=ctx)
+    counts = jnp.asarray(counts, jnp.int32)
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(counts - 1, 0)[:, None, None], axis=1)[:, 0, :]
+    return last, cache
+
+
+def step_rows_full(params, cfg: ModelConfig, cache, tokens: Array,
+                   pos: Array, counts: Array,
+                   paged_live_width: Optional[int] = None,
+                   paged_live_widths: Optional[Array] = None,
+                   ctx: QuantContext = NO_QUANT):
+    """``step_rows`` returning ALL positions' logits (B, T, vocab) — the
+    speculative tick's forward, where EVERY fed position's prediction is
+    consumed (position j's logits decide the fate of draft token j+1).
+    Same masked-scatter write contract: padding tokens (j >= counts[b])
+    write nothing; *rejected draft* tokens DO write, which is sound
+    because every read path masks by logical position — see
+    ``make_spec_step``."""
     b, t = tokens.shape
     counts = jnp.asarray(counts, jnp.int32)
     active = jnp.arange(t, dtype=jnp.int32)[None, :] < counts[:, None]
@@ -176,9 +220,7 @@ def step_rows(params, cfg: ModelConfig, cache, tokens: Array, pos: Array,
                               cache=cache, pos=pos, active=active,
                               paged_live_width=paged_live_width,
                               paged_live_widths=paged_live_widths)
-    last = jnp.take_along_axis(
-        logits, jnp.maximum(counts - 1, 0)[:, None, None], axis=1)[:, 0, :]
-    return last, aux["cache"]
+    return logits, aux["cache"]
 
 
 def make_mixed_step(cfg: ModelConfig, gen: GenerateConfig,
@@ -205,6 +247,52 @@ def make_mixed_step(cfg: ModelConfig, gen: GenerateConfig,
         return nxt, new_cache
 
     return jax.jit(_mixed_step, static_argnums=(6,))
+
+
+def make_spec_step(cfg: ModelConfig, gen: GenerateConfig,
+                   ctx: QuantContext = NO_QUANT):
+    """Build the jitted SPECULATIVE engine tick: one ``step_rows_full``
+    forward verifying up to k draft tokens per decode row in a single
+    variable-Tq read, returning the full (B, T) target-token matrix
+    instead of one token per row.
+
+    A decode row feeds ``[last_token, d_1 .. d_k]`` at its position; the
+    returned ``tgt[b, j]`` is what plain decoding would emit at position
+    ``pos[b] + j + 1``, so the host accepts the longest prefix of drafts
+    with ``d_j == tgt[b, j-1]`` and always banks the bonus token
+    ``tgt[b, n_acc]`` — 1..k+1 tokens per tick, bitwise identical to the
+    non-speculative stream (see ``sample_rows_all``). Prefill rows ride
+    the same forward unchanged: a final chunk's first token is
+    ``tgt[b, c-1]``, exactly what ``make_mixed_step`` would have sampled,
+    so one program serves the whole mixed tick.
+
+    Rejected drafts HAVE already scattered their K/V into the cache when
+    verification happens (write and read are one fused program). That is
+    sound for global-attn caches, dense or paged, fp or int8: (a) every
+    read path masks keys by logical position (causal mask / live-width
+    mask over positions <= q), so entries past a row's accepted position
+    are causally invisible; (b) the row's next writes land at those same
+    positions and overwrite the stale entries before its position
+    advances past them; (c) KV bits (incl. int8 quantize-at-write) are
+    pure functions of (token, position), so the overwrite equals what a
+    non-speculative tick would have written. It is NOT sound for ring
+    (``local_attn``) or recurrent state — a ring write at pos % window
+    clobbers live in-window history and a recurrence has no position to
+    mask — which is why the scheduler refuses ``spec=`` for those
+    configs. ``live_width`` stays the static pow-2-bucketed argument and
+    T is bucketed by the scheduler, so the speculative tick adds at most
+    log2(k+1) extra specializations."""
+
+    def _spec_step(params, cache, tokens, pos, counts, keys,
+                   live_width, live_widths):
+        logits, new_cache = step_rows_full(
+            params, cfg, cache, tokens, pos, counts,
+            paged_live_width=live_width, paged_live_widths=live_widths,
+            ctx=ctx)
+        tgt = sample_rows_all(logits, gen, keys, pos)
+        return tgt, new_cache
+
+    return jax.jit(_spec_step, static_argnums=(6,))
 
 
 @partial(jax.jit, static_argnums=(1, 4))

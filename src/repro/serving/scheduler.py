@@ -152,6 +152,27 @@ block's refcount equals its owner count across slot tables + trie +
 group snapshots. Sharing is bitwise-invisible: KV bits (fp, or int8
 with its per-token scale) are pure functions of (token, position), so a
 shared read equals the cold prefill the sharing replaced.
+
+Speculative decoding (``spec=SpecConfig(k=...)`` — see
+``serving.speculate`` and docs/serving.md "Speculative decoding"): each
+decode row feeds its last token PLUS up to k model-free n-gram drafts
+into the same fused tick; ``make_spec_step`` returns the full (B, T)
+target matrix and the host accepts the longest draft prefix matching it,
+advancing the row 1..k+1 tokens per tick — bitwise identical to the
+non-speculative stream because the accept test IS position-keyed
+sampling. Scheduler-side that means: ``_plan`` grows a decode row's
+block table to cover 1+k writes (possibly crossing several block
+boundaries in one tick — ``_grow_blocks`` already handles multi-block
+growth and cursor-block CoW, and a short grant just truncates the
+draft), rejected drafts leave stale-but-causally-hidden cache entries
+that the row's own later writes overwrite (swap copies them harmlessly;
+recompute-resume never rebuilds them), and accounting splits into
+``last_tick_tokens`` (FED tokens — the compute the tick paid, what the
+virtual clock charges) vs ``last_tick_new_tokens`` (tokens actually
+banked into outputs — what goodput/TPOT count). Speculation requires an
+all-'attn' pattern (ring/recurrent writes cannot be causally hidden)
+and composes with paged/dense, fp/int8, prefix sharing, ``Request(n)``
+branches, swap and preemption — all equivalence-tested.
 """
 from __future__ import annotations
 
@@ -172,8 +193,13 @@ from repro.models.transformer import (
 from repro.quant.int8_weights import attach_int8_weights
 from repro.quant.ptq import calibrate
 from repro.quant.qconfig import NO_QUANT, QConfig
-from repro.serving.decode import GenerateConfig, make_mixed_step
+from repro.serving.decode import (
+    GenerateConfig,
+    make_mixed_step,
+    make_spec_step,
+)
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.speculate import NGramDrafter, SpecConfig
 
 Array = jax.Array
 
@@ -495,6 +521,7 @@ class ContinuousBatcher:
                  fault_shed_after: int = 8,
                  on_pool_exhausted: str = "raise",
                  prefix_cache: bool = False,
+                 spec: Optional[SpecConfig] = None,
                  debug_audit: bool = False) -> None:
         # ---- INT8 serving (W8A8 tick + quantized paged KV) -------------
         if kv_int8 is None:
@@ -569,8 +596,14 @@ class ContinuousBatcher:
         # (counts as a retry attempt -> bounded degradation to recompute)
         self._swap_in_gate: Optional[Callable[[Request], bool]] = None
         # total REAL tokens processed by the most recent step() across all
-        # sub-steps — the workload harness's virtual-clock cost input
+        # sub-steps — the workload harness's virtual-clock cost input.
+        # With speculation this counts FED tokens (drafts included,
+        # accepted or not): it is the tick's compute cost, not its yield
         self.last_tick_tokens = 0
+        # tokens BANKED into request outputs by the most recent step():
+        # decode advances (1..k+1 per row under speculation) plus each
+        # completed prefill's first token — the goodput/TPOT numerator
+        self.last_tick_new_tokens = 0
         # counts vector of the most recent sub-step (observability + tests:
         # a mixed tick shows >= 2 entries > 1 next to entries == 1)
         self.last_counts: Optional[np.ndarray] = None
@@ -611,6 +644,29 @@ class ContinuousBatcher:
         # block cannot carry, so those configs run sampling branches
         # independently and cannot cache prefixes
         self._can_share = paged and all(k == "attn" for k in kinds)
+        # ---- speculative decoding --------------------------------------
+        # sound only for global-attn KV (dense or paged): a rejected
+        # draft's cache write is causally hidden (every read path masks
+        # keys at positions > q) and overwritten by the row's own next
+        # writes before its position passes it — but a local_attn RING
+        # write at pos % window clobbers live in-window history, and a
+        # recurrent state has no per-token position to hide behind
+        self.spec = spec
+        self._drafter: Optional[NGramDrafter] = None
+        self._tick_drafts: Dict[int, List[int]] = {}
+        # observability: drafted vs accepted totals (accept rate =
+        # spec_accepted / spec_drafted), read by tests + the benchmark
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        if spec is not None:
+            if not all(k == "attn" for k in kinds):
+                raise ValueError(
+                    "spec=SpecConfig(...) requires an all-'attn' layer "
+                    "pattern: rejected draft writes are only causally "
+                    "hidden in a global-attn KV cache — a local_attn "
+                    "ring write clobbers in-window history and "
+                    "recurrent states have no per-token write to mask")
+            self._drafter = NGramDrafter(spec)
         self.prefix_cache: Optional[PrefixCache] = None
         if prefix_cache:
             if not self._can_share:
@@ -648,8 +704,13 @@ class ContinuousBatcher:
             lambda a, b: a.shape == b.shape, spec1, spec2)
 
         # the jitted fused tick lives with the other serving programs in
-        # decode.py; calibrated int8 ranges ride along as closure constants
-        self._step_fn = make_mixed_step(cfg, self._gen, self._qctx)
+        # decode.py; calibrated int8 ranges ride along as closure
+        # constants. A speculative engine runs make_spec_step for EVERY
+        # tick (it subsumes the mixed step: a draft-free decode row is the
+        # T=1 case and a prefill chunk's first token is tgt[b, c-1]), so
+        # spec adds one program family, not two
+        make_step = make_mixed_step if spec is None else make_spec_step
+        self._step_fn = make_step(cfg, self._gen, self._qctx)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -1232,15 +1293,43 @@ class ContinuousBatcher:
             budget = self.token_budget
             pleft = self.prefill_budget if self.prefill_budget is not None \
                 else self.token_budget
+            self._tick_drafts = {}
             if want_decode:
                 for i, s in enumerate(self.slots):
                     if s.req is None or s.prefill is not None:
                         continue
-                    if self.paged and self._grow_blocks(i, 1) < 1:
-                        stalled.append(i)
-                        continue
-                    counts[i] = 1
-                    budget -= 1
+                    drafts: List[int] = []
+                    if self.spec is not None:
+                        # per-row draft length: the SpecConfig cap, then
+                        # the cache row's write bounds (k+1 writes at
+                        # pos..pos+k must stay < L-1 so the row can still
+                        # retire cleanly), then the tokens the request
+                        # can still USE (accepting past max_new_tokens
+                        # is wasted verification), then leftover budget
+                        # (the base decode token stays budget-exempt,
+                        # like the non-speculative tick)
+                        k_cap = min(self.spec.k,
+                                    self.L - 2 - s.pos,
+                                    s.req.max_new_tokens
+                                    - len(s.generated) - 1,
+                                    budget - 1)
+                        if k_cap > 0:
+                            drafts = self._drafter.propose(
+                                s.req.prompt, s.generated, k_cap)
+                    c = 1 + len(drafts)
+                    if self.paged:
+                        # one tick may cross several block boundaries;
+                        # a short grant truncates the draft instead of
+                        # stalling the row
+                        c = self._grow_blocks(i, c)
+                        if c < 1:
+                            stalled.append(i)
+                            continue
+                        drafts = drafts[:c - 1]
+                    counts[i] = c
+                    budget -= c
+                    if drafts:
+                        self._tick_drafts[i] = drafts
             if want_prefill:
                 def edf(i):
                     s = self.slots[i]
@@ -1370,6 +1459,9 @@ class ContinuousBatcher:
             pos[i] = s.pos
             if s.prefill is None:
                 tokens[i, 0] = s.generated[-1] if s.generated else 0
+                drafts = self._tick_drafts.get(i)
+                if drafts:
+                    tokens[i, 1:c] = drafts
             else:
                 st = s.prefill
                 tokens[i, :c] = st.feed[st.done:st.done + c]
@@ -1389,13 +1481,18 @@ class ContinuousBatcher:
             jnp.asarray(counts), jnp.asarray(keys),
             self._live_width(), live_widths)
         nt = np.asarray(nxt)
+        spec_on = self.spec is not None
         self.last_tick_tokens += int(counts.sum())
         for i in run:
             s = self.slots[i]
             c = int(counts[i])
             if s.prefill is None:
-                s.generated.append(int(nt[i]))
-                s.pos += 1
+                if spec_on:
+                    self._apply_spec_decode(i, nt[i], c)
+                else:
+                    s.generated.append(int(nt[i]))
+                    s.pos += 1
+                    self.last_tick_new_tokens += 1
             else:
                 st = s.prefill
                 st.done += c
@@ -1406,13 +1503,48 @@ class ContinuousBatcher:
                     # token at position len(feed), drawn under the same
                     # position-keyed rule as every decode tick. A resumed
                     # request restores its stashed continuation instead.
-                    s.generated = list(st.resume) if st.resume \
-                        else [int(nt[i])]
+                    # (A spec step returns the (T,) target row; entry c-1
+                    # is exactly the mixed step's last-token sample.)
+                    first = int(nt[i, c - 1]) if spec_on else int(nt[i])
+                    s.generated = list(st.resume) if st.resume else [first]
                     s.prefill = None
+                    if not st.resume:
+                        self.last_tick_new_tokens += 1
                     self._on_prefill_done(i)
             if s.generated and s.req.first_token_time is None:
                 s.req.first_token_time = self.now
         return int(run.size)
+
+    def _apply_spec_decode(self, i: int, tgt: np.ndarray, c: int) -> None:
+        """Verify slot ``i``'s drafts against the (T,) target row of the
+        speculative tick and bank 1..c tokens: the longest draft prefix
+        with ``draft[j] == tgt[j]`` plus the bonus token ``tgt[n_acc]``
+        (always valid — it was sampled conditioned only on the accepted
+        prefix). EOS / max_new_tokens truncate the banked run, in which
+        case the row retires this very tick and its over-written cache
+        tail is never read. ``pos`` advances by the banked count, so
+        rejected drafts' cache entries sit at positions >= the new pos:
+        causally invisible to every read, and overwritten (with identical
+        bits) by the row's own future writes before pos passes them."""
+        s = self.slots[i]
+        drafts = self._tick_drafts.pop(i, [])
+        n_acc = 0
+        while n_acc < len(drafts) and drafts[n_acc] == int(tgt[n_acc]):
+            n_acc += 1
+        self.spec_drafted += len(drafts)
+        self.spec_accepted += n_acc
+        banked = drafts[:n_acc] + [int(tgt[n_acc])]
+        room = s.req.max_new_tokens - len(s.generated)
+        kept: List[int] = []
+        for tok in banked:
+            kept.append(tok)
+            if self.eos_id is not None and tok == self.eos_id:
+                break
+            if len(kept) >= room:
+                break
+        s.generated.extend(kept)
+        s.pos += len(kept)
+        self.last_tick_new_tokens += len(kept)
 
     def _on_prefill_done(self, i: int) -> None:
         """Prefill-completion hooks for slot ``i``:
@@ -1457,6 +1589,11 @@ class ContinuousBatcher:
             dec = max(0, req.max_new_tokens - len(resume))
         cap = min(self._chunk_cap,
                   self.prefill_budget or self.token_budget)
+        if self.spec is not None:
+            # a speculative tick can bank up to k+1 decode tokens; the
+            # bound must stay OPTIMISTIC (shedding on an overestimate
+            # would drop feasible requests), so assume full acceptance
+            dec = -(-dec // (self.spec.k + 1))
         return -(-feed_left // max(cap, 1)) + dec
 
     def _enforce_slos(self) -> None:
@@ -1592,6 +1729,7 @@ class ContinuousBatcher:
         self.now = now
         self._alloc_fault = False
         self.last_tick_tokens = 0
+        self.last_tick_new_tokens = 0
         self._retire()
         self._enforce_slos()
         self._admit()

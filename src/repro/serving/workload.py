@@ -30,7 +30,18 @@ Three pieces:
   * ``WorkloadReport`` — goodput (global and per tier), delivered tokens,
     TTFT p50/p99 per tier, p99 decode-tick stall (the cost of ticks in
     which at least one row was decoding — the inter-token latency a user
-    actually observes), and per-status failure counts.
+    actually observes), per-tier TPOT (time per banked output token, from
+    each done request's own first-token->finish span), and per-status
+    failure counts.
+
+Accounting under speculative decoding: a tick is no longer one token per
+decode row. The runner charges the clock with the engine's
+``last_tick_tokens`` — FED tokens, drafts included, because that is the
+compute the forward actually paid — but throughput/TPOT numerators use
+*banked* tokens (``last_tick_new_tokens`` per tick; request outputs at
+report time), so a rejected draft makes the engine look slower, never
+faster. Goodput already counts ``req.output`` lengths, which are banked
+by construction.
 
 The runner never reaches into the engine's scheduling decisions — it only
 submits, cancels, and advances the clock — so the same trace can drive
@@ -185,6 +196,11 @@ class TierReport:
     goodput_tokens: int = 0        # tokens of in-SLO completions
     delivered_tokens: int = 0      # all tokens handed back (incl. partial)
     ttft: List[float] = dataclasses.field(default_factory=list)
+    # per-request time-per-output-token: (finish - first_token)/(n - 1)
+    # for done requests with >= 2 tokens. Derived from request stamps,
+    # not tick counts, so a speculative tick banking several tokens
+    # lowers TPOT exactly as much as it should
+    tpot: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def ttft_p50(self) -> float:
@@ -193,6 +209,14 @@ class TierReport:
     @property
     def ttft_p99(self) -> float:
         return _pct(self.ttft, 0.99)
+
+    @property
+    def tpot_p50(self) -> float:
+        return _pct(self.tpot, 0.50)
+
+    @property
+    def tpot_p99(self) -> float:
+        return _pct(self.tpot, 0.99)
 
 
 @dataclasses.dataclass
@@ -204,24 +228,38 @@ class WorkloadReport:
     tick_p50: float
     stall_p99: float               # p99 cost of ticks with a decoding row
     tiers: Dict[str, TierReport]
+    # decode-phase aggregates: tokens BANKED on ticks that had a decoding
+    # row, and those ticks' total cost — decode_time/decode_tokens is the
+    # engine-level TPOT (equals stall-per-token only when every tick
+    # banks exactly 1 token per row; speculation breaks that identity,
+    # which is why this is tracked in tokens, not ticks)
+    decode_tokens: int = 0
+    decode_time: float = 0.0
 
     @property
     def goodput_tok_s(self) -> float:
         return self.goodput_tokens / self.duration if self.duration else 0.0
 
+    @property
+    def decode_tpot(self) -> float:
+        return self.decode_time / self.decode_tokens \
+            if self.decode_tokens else float("nan")
+
     def table(self) -> str:
         """CSV-ish per-tier summary (the benchmark prints this)."""
         lines = ["tier,offered,done,in_slo,shed,goodput_tok,"
-                 "ttft_p50,ttft_p99"]
+                 "ttft_p50,ttft_p99,tpot_p50"]
         for tr in self.tiers.values():
             shed = sum(tr.failed.values())
             lines.append(f"{tr.name},{tr.offered},{tr.done},{tr.in_slo},"
                          f"{shed},{tr.goodput_tokens},{tr.ttft_p50:.3f},"
-                         f"{tr.ttft_p99:.3f}")
+                         f"{tr.ttft_p99:.3f},{tr.tpot_p50:.4f}")
         lines.append(f"TOTAL goodput {self.goodput_tokens} tok "
                      f"({self.goodput_tok_s:.1f} tok/s virtual), delivered "
                      f"{self.delivered_tokens} tok, stall_p99 "
-                     f"{self.stall_p99 * 1e3:.2f} ms over {self.ticks} ticks")
+                     f"{self.stall_p99 * 1e3:.2f} ms, decode_tpot "
+                     f"{self.decode_tpot * 1e3:.2f} ms/tok over "
+                     f"{self.ticks} ticks")
         return "\n".join(lines)
 
 
@@ -246,6 +284,8 @@ def run_workload(batcher: ContinuousBatcher, trace: List[TraceEntry],
     ticks = 0
     tick_costs: List[float] = []
     stalls: List[float] = []
+    decode_tokens = 0
+    decode_time = 0.0
     while ticks < max_ticks:
         while k < len(pending) and pending[k].arrival <= t:
             batcher.submit(pending[k].request())
@@ -263,12 +303,17 @@ def run_workload(batcher: ContinuousBatcher, trace: List[TraceEntry],
                        for s in batcher.slots)
         t0 = time.perf_counter()
         batcher.step(now=t)
+        # the clock is charged for FED tokens (speculative drafts
+        # included — the forward computed them whether or not they were
+        # accepted); banked tokens feed the TPOT numerator below
         dt = time.perf_counter() - t0 if wall_clock \
             else cost.cost(batcher.last_tick_tokens)
         ticks += 1
         tick_costs.append(dt)
         if decoding:
             stalls.append(dt)
+            decode_tokens += int(batcher.last_tick_new_tokens)
+            decode_time += dt
         t += dt
 
     tiers: Dict[str, TierReport] = {}
@@ -290,6 +335,9 @@ def run_workload(batcher: ContinuousBatcher, trace: List[TraceEntry],
             goodput += n
         if req.first_token_time is not None:
             tr.ttft.append(req.first_token_time - e.arrival)
+            if req.finish_time is not None and n >= 2:
+                tr.tpot.append(
+                    (req.finish_time - req.first_token_time) / (n - 1))
     for req in batcher.failed:
         e = by_uid.get(req.uid)
         if e is None:
@@ -305,4 +353,6 @@ def run_workload(batcher: ContinuousBatcher, trace: List[TraceEntry],
                           delivered_tokens=delivered,
                           tick_p50=_pct(tick_costs, 0.50),
                           stall_p99=_pct(stalls, 0.99),
-                          tiers=tiers)
+                          tiers=tiers,
+                          decode_tokens=decode_tokens,
+                          decode_time=decode_time)

@@ -13,7 +13,7 @@ from repro.analysis.compile_guard import (CompileBudgetExceeded,
                                           CompileGuard, track)
 from repro.models import model_init
 from repro.models.transformer import ModelConfig
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request, SpecConfig
 from repro.serving.scheduler import _bucket
 
 KEY = jax.random.PRNGKey(0)
@@ -85,6 +85,39 @@ def test_decode_tick_sweep_within_pow2_budget():
     assert out.shape == (25,)
     # the sweep genuinely crossed buckets: ticks saw widths 1 and >8
     assert _bucket(14) == 16
+
+
+@pytest.mark.compile_budget(6)
+def test_spec_tick_sweep_within_pow2_budget():
+    """Speculative tick: per-tick Tq = 1 + draft length reaches jax.jit
+    as a static arg only after pow-2 bucketing. A stub drafter cycles
+    draft lengths 0..k so successive ticks sweep every Tq in 1..k+1;
+    bucketed, that is one program per pow-2 bucket ({1, 2, 4, 8} for
+    k=7), and the prefill chunk (T=2) reuses the T=2 program — the spec
+    step is ONE program family, not a per-draft-length zoo. Unbucketed
+    Tq would need a compile per distinct draft length (~8) and trip the
+    budget."""
+    cfg = _tiny()
+    params = model_init(KEY, cfg)
+    # block_size == max_len: every row holds exactly one block, so the
+    # live-width static stays 1 and the sweep isolates the Tq axis
+    b = ContinuousBatcher(params, cfg, batch_size=1, max_len=64,
+                          paged=True, block_size=64, num_blocks=4,
+                          spec=SpecConfig(k=7))
+
+    class _CycleDrafter:
+        calls = 0
+
+        def propose(self, prompt, generated, k):
+            self.calls += 1
+            return [1] * min((self.calls - 1) % 8, k)
+
+    b._drafter = _CycleDrafter()
+    b.submit(Request(uid=0, prompt=np.arange(2, 4, dtype=np.int32),
+                     max_new_tokens=30))
+    out = b.run()[0].output
+    assert out.shape == (30,)
+    assert b._drafter.calls > 8  # the cycle wrapped: every Tq was fed
 
 
 def test_unbucketed_static_arg_trips_guard(monkeypatch):

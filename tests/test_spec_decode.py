@@ -1,0 +1,382 @@
+"""Speculative decoding: n-gram drafting + k-token verification is
+LOSSLESS — spec-on vs spec-off bitwise token equality across
+dense/paged x fp/int8-KV x greedy/sampled x chunked-prefill x
+prefix-cache-warm admission x parallel sampling, EOS/max_new truncation
+inside an accepted run, multi-block-boundary ticks, fed-vs-banked
+accounting, and chaos storms (preempt/swap/cancel) mid-speculation with
+a clean allocator audit and token-exact survivors."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import ModelConfig, model_init
+from repro.serving import (
+    ChaosHarness,
+    ContinuousBatcher,
+    FaultPlan,
+    GenerateConfig,
+    NGramDrafter,
+    Request,
+    SpecConfig,
+    TickCostModel,
+    TraceEntry,
+    generate,
+    run_workload,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny(**kw):
+    base = dict(name="tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                d_ff=64, vocab_size=64, pos="rope", max_seq_len=1024,
+                scan_layers=False, remat=False, mlp_kind="swiglu",
+                norm="rmsnorm")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny()
+    return cfg, model_init(KEY, cfg)
+
+
+def _engine(setup, **kw):
+    cfg, params = setup
+    base = dict(batch_size=4, max_len=96, paged=True, block_size=8,
+                num_blocks=56, debug_audit=True)
+    base.update(kw)
+    return ContinuousBatcher(params, cfg, **base)
+
+
+def _motif_prompt(n, motif=(3, 7, 11, 5)):
+    """Repetitive prompt: the drafter's n-gram lookup fires on it, and a
+    tiny greedy model's continuation is repetitive too, so acceptance is
+    actually exercised (tests assert it is, so equality is non-vacuous)."""
+    reps = -(-n // len(motif))
+    return np.asarray((list(motif) * reps)[:n], np.int32)
+
+
+def _reqs(k=3, plen=24, max_new=20, seeds=False):
+    return [Request(uid=u, prompt=_motif_prompt(plen + u),
+                    max_new_tokens=max_new,
+                    seed=100 + u if seeds else None) for u in range(k)]
+
+
+def _outs(b):
+    return {r.uid: r.output.tolist() for r in b.done}
+
+
+def _run(setup, reqs, spec=None, **kw):
+    b = _engine(setup, spec=spec, **kw)
+    for r in reqs:
+        b.submit(dataclasses.replace(r, prompt=r.prompt.copy(), output=None))
+    b.run()
+    if b.paged:
+        b.audit()
+    return b
+
+
+def _assert_pair(setup, reqs, spec=SpecConfig(k=4), **kw):
+    """spec-off vs spec-on engines over the same requests: outputs must
+    be bitwise equal AND the speculative run must actually accept."""
+    base = _run(setup, reqs, spec=None, **kw)
+    spec_b = _run(setup, reqs, spec=spec, **kw)
+    assert _outs(base) == _outs(spec_b)
+    assert spec_b.spec_drafted > 0 and spec_b.spec_accepted > 0
+    return base, spec_b
+
+
+# ---------------------------------------------------------------------------
+class TestDrafter:
+    def test_prompt_lookup_continuation(self):
+        d = NGramDrafter(SpecConfig(k=4, max_ngram=3))
+        out = d.propose(np.asarray([1, 2, 3, 4, 1, 2], np.int32), [], 2)
+        assert out == [3, 4]          # suffix [1,2] recurs at 0 -> [3,4]
+
+    def test_most_recent_occurrence_wins(self):
+        d = NGramDrafter(SpecConfig(k=1, max_ngram=2))
+        out = d.propose(np.asarray([1, 2, 5, 1, 2, 7, 1, 2], np.int32),
+                        [], 1)
+        assert out == [7]             # match at index 3, not index 0
+
+    def test_generated_history_is_searched(self):
+        d = NGramDrafter(SpecConfig(k=3, max_ngram=2))
+        out = d.propose(np.asarray([9, 8], np.int32), [4, 5, 6, 4, 5], 3)
+        assert out == [6, 4, 5]       # suffix [4,5] recurs inside generated
+
+    def test_no_match_and_min_context(self):
+        d = NGramDrafter(SpecConfig(k=4, min_context=4))
+        assert d.propose(np.asarray([1, 2, 3, 4, 5], np.int32), [], 4) == []
+        assert d.propose(np.asarray([7, 7, 7], np.int32), [], 4) == []
+
+    def test_k_truncates(self):
+        d = NGramDrafter(SpecConfig(k=8, max_ngram=1))
+        out = d.propose(_motif_prompt(12), [], 2)
+        assert len(out) == 2
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            SpecConfig(k=0)
+        with pytest.raises(ValueError):
+            SpecConfig(min_ngram=3, max_ngram=2)
+        with pytest.raises(ValueError):
+            SpecConfig(min_context=0)
+
+
+class TestGating:
+    def test_ring_config_refused(self, setup):
+        _, params = setup
+        cfg = _tiny(pattern=("attn", "local_attn"), window=16)
+        params = model_init(KEY, cfg)
+        with pytest.raises(ValueError, match="all-'attn'"):
+            ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              spec=SpecConfig(k=2))
+
+    def test_recurrent_config_refused(self):
+        from repro.nn.recurrent import RGLRUConfig
+        cfg = _tiny(pattern=("attn", "griffin"), max_seq_len=64,
+                    rglru=RGLRUConfig(width=32, conv_width=4))
+        params = model_init(KEY, cfg)
+        with pytest.raises(ValueError, match="all-'attn'"):
+            ContinuousBatcher(params, cfg, batch_size=2, max_len=64,
+                              spec=SpecConfig(k=2))
+
+
+# ---------------------------------------------------------------------------
+class TestLossless:
+    def test_paged_fp_greedy(self, setup):
+        _assert_pair(setup, _reqs())
+
+    def test_paged_fp_sampled(self, setup):
+        # seeded temperature sampling: acceptance needs the draft to hit
+        # the exact categorical draw, so feed the sampler's own history
+        # back long enough for self-repetition to appear
+        _assert_pair(setup, _reqs(seeds=True, max_new=32),
+                     gen=GenerateConfig(temperature=0.3, top_k=4))
+
+    def test_dense_fp_greedy(self, setup):
+        _assert_pair(setup, _reqs(), paged=False, block_size=16,
+                     num_blocks=None)
+
+    def test_paged_int8_kv_greedy(self, setup):
+        _assert_pair(setup, _reqs(), kv_int8=True)
+
+    def test_paged_int8_kv_sampled(self, setup):
+        _assert_pair(setup, _reqs(seeds=True, max_new=32), kv_int8=True,
+                     gen=GenerateConfig(temperature=0.3, top_k=4))
+
+    def test_chunked_prefill_mixed_ticks(self, setup):
+        # tiny token budget: prompts stream in multi-tick chunks while
+        # earlier rows already speculate — the mixed tick carries both
+        _assert_pair(setup, _reqs(k=4, plen=30), token_budget=12,
+                     prefill_chunk=8)
+
+    def test_engine_vs_standalone_generate(self, setup):
+        cfg, params = setup
+        req = _reqs(k=1, max_new=16)[0]
+        ref = np.asarray(generate(
+            params, cfg, jnp.asarray(req.prompt)[None, :],
+            GenerateConfig(max_new_tokens=16))[0, len(req.prompt):])
+        b = _run(setup, [req], spec=SpecConfig(k=4))
+        np.testing.assert_array_equal(b.done[0].output, ref)
+
+    def test_eos_inside_accepted_run(self, setup):
+        # Force EOS to land INSIDE an accepted draft, not as a plain
+        # decode token: prompt (2,9)* drives this model's greedy tail
+        # into a period-2 cycle (A,B,A,B,...).  Teacher-force a prompt
+        # that ends mid-cycle and set eos=B: the drafter's first proposal
+        # is [B,A,B,A], the verifier accepts it, and the kept run must
+        # truncate at the first banked B.
+        probe = [Request(uid=0, prompt=_motif_prompt(24, motif=(2, 9)),
+                         max_new_tokens=32)]
+        out0 = _run(setup, probe).done[0].output.tolist()
+        cut = len(out0) - 5
+        a, eos = out0[cut], out0[cut + 1]  # continuation = [a, eos, a, ...]
+        assert a != eos and out0[cut:] == [a, eos, a, eos, a]  # period 2
+        # a != eos ensures the first post-prefill token survives, so the
+        # EOS can only arrive through a verified draft
+        prompt = np.concatenate([_motif_prompt(24, motif=(2, 9)),
+                                 np.asarray(out0[:cut], np.int32)])
+        reqs = [Request(uid=0, prompt=prompt, max_new_tokens=16)]
+        base, spec_b = _assert_pair(setup, reqs, eos_id=eos)
+        out = spec_b.done[0].output.tolist()
+        assert out == [a, eos]  # truncated at EOS mid-accepted-run
+
+    def test_max_new_tokens_exact(self, setup):
+        # teacher-forced cyclic prompt (same trick as the EOS test): the
+        # run accepts drafts from tick one, and max_new_tokens must clamp
+        # the banked tokens exactly — the draft cap (k_cap) and the kept
+        # loop both respect the remaining room
+        probe = [Request(uid=0, prompt=_motif_prompt(24, motif=(2, 9)),
+                         max_new_tokens=32)]
+        out0 = _run(setup, probe).done[0].output.tolist()
+        cut = len(out0) - 7
+        a, b = out0[cut], out0[cut + 1]
+        assert a != b and out0[cut:] == [a, b, a, b, a, b, a]  # period 2
+        prompt = np.concatenate([_motif_prompt(24, motif=(2, 9)),
+                                 np.asarray(out0[:cut], np.int32)])
+        reqs = [Request(uid=0, prompt=prompt, max_new_tokens=3)]
+        _, spec_b = _assert_pair(setup, reqs, spec=SpecConfig(k=5))
+        out = spec_b.done[0].output.tolist()
+        assert out == out0[cut:cut + 3]  # exact clamp mid-accepted-run
+
+    def test_multi_block_boundary_one_tick(self, setup):
+        # block_size 4 with k=6: an accepting tick writes up to 7 tokens,
+        # crossing >= 2 block boundaries — _grow_blocks multi-block path
+        base, spec_b = _assert_pair(setup, _reqs(max_new=24),
+                                    spec=SpecConfig(k=6), block_size=4,
+                                    num_blocks=96)
+        assert spec_b.spec_accepted >= 6
+
+    def test_prefix_cache_warm_admission(self, setup):
+        prompt = _motif_prompt(32)
+        reqs = [Request(uid=0, prompt=prompt.copy(), max_new_tokens=12),
+                Request(uid=1, prompt=prompt.copy(), max_new_tokens=12)]
+
+        def run(spec):
+            b = _engine(setup, spec=spec, prefix_cache=True)
+            b.submit(dataclasses.replace(reqs[0], prompt=prompt.copy()))
+            b.run()                      # cold request publishes blocks
+            b.submit(dataclasses.replace(reqs[1], prompt=prompt.copy()))
+            b.run()                      # warm: admitted on cached blocks
+            b.audit()
+            assert b.shared_admissions >= 1
+            return b
+
+        base, spec_b = run(None), run(SpecConfig(k=4))
+        assert _outs(base) == _outs(spec_b)
+        assert spec_b.spec_accepted > 0
+        cold, warm = _outs(spec_b)[0], _outs(spec_b)[1]
+        assert cold == warm
+
+    def test_parallel_sampling_branches(self, setup):
+        def run(spec):
+            b = _engine(setup, spec=spec,
+                        gen=GenerateConfig(temperature=0.3, top_k=4))
+            b.submit(Request(uid=0, prompt=_motif_prompt(24),
+                             max_new_tokens=16, n=3, seed=7))
+            b.run()
+            b.audit()
+            return [o.tolist() for o in b.done[0].outputs]
+
+        assert run(None) == run(SpecConfig(k=3))
+
+    def test_qconfig_int8_w8a8_greedy(self, setup):
+        from repro.quant.qconfig import QConfig
+        _assert_pair(setup, _reqs(max_new=12), kv_int8=True,
+                     qconfig=QConfig(), calib_batches=2)
+
+
+# ---------------------------------------------------------------------------
+class TestAccounting:
+    def test_fed_vs_banked_tokens(self, setup):
+        b = _engine(setup, spec=SpecConfig(k=4))
+        for r in _reqs():
+            b.submit(r)
+        fed = banked = 0
+        multi = False
+        while b.queue or any(s.req is not None for s in b.slots):
+            b.step()
+            assert b.last_tick_new_tokens <= b.last_tick_tokens
+            fed += b.last_tick_tokens
+            banked += b.last_tick_new_tokens
+            dec = sum(1 for s in b.slots
+                      if s.req is not None and s.prefill is None)
+            if b.last_tick_new_tokens > max(dec, 1):
+                multi = True
+        # every output token was banked exactly once, and at least one
+        # tick banked more than one token per decode row
+        assert banked == sum(len(r.output) for r in b.done)
+        assert multi
+        assert fed >= banked
+
+    def test_min_ticks_left_stays_optimistic(self, setup):
+        b = _engine(setup, spec=SpecConfig(k=3))
+        req = Request(uid=0, prompt=_motif_prompt(8), max_new_tokens=8)
+        req.arrival, req.submit_time = 0, 0.0
+        est = b._min_ticks_left(req)
+        # prefill fits one chunk; decode is bounded below by full
+        # acceptance: ceil(8 / (k+1)) = 2 ticks, not 8
+        assert est == 1 + 2
+
+    def test_workload_decode_tpot_improves(self, setup):
+        # virtual-clock open loop over a repetitive trace: charging FED
+        # tokens, speculation still wins because banked tokens per tick
+        # outgrow the per-token cost — decode TPOT must drop
+        trace = [TraceEntry(uid=u, arrival=0.02 * u, tier="t", priority=0,
+                            prompt=_motif_prompt(24),
+                            max_new_tokens=24, deadline=1e9)
+                 for u in range(6)]
+        cost = TickCostModel(base=2e-3, per_token=1e-4)
+
+        def tpot(spec):
+            rep = run_workload(_engine(setup, spec=spec), list(trace), cost)
+            assert rep.decode_tokens > 0
+            assert rep.goodput_tokens == 6 * 24
+            return rep.decode_tpot
+
+        assert tpot(SpecConfig(k=4)) < tpot(None)
+
+
+# ---------------------------------------------------------------------------
+class TestChaosMidSpeculation:
+    def test_storm_plans_audit_clean_survivors_exact(self, setup):
+        """Preempt/swap/cancel storms against a SPECULATING int8-KV
+        engine: the harness audits every tick, survivors must be
+        token-exact vs the plain non-speculative oracle — chaos may
+        delay speculation (stale draft tails dropped at preempt,
+        swapped with the blocks, recomputed on resume), never leak it
+        into outputs."""
+        cfg, params = setup
+        reqs = _reqs(k=5, plen=20, max_new=10)
+        oracle = _outs(_run(setup, reqs, spec=None, kv_int8=True,
+                            block_size=4, num_blocks=64))
+        for seed in range(3):
+            plan = FaultPlan.random(seed, ticks=16, p_storm=0.3,
+                                    p_deny=0.2)
+            b = _engine(setup, spec=SpecConfig(k=4), kv_int8=True,
+                        block_size=4, num_blocks=64,
+                        swap_break_even_tokens=8,
+                        on_pool_exhausted="shed")
+            for r in reqs:
+                b.submit(dataclasses.replace(r, prompt=r.prompt.copy(),
+                                             output=None))
+            h = ChaosHarness(b, plan)
+            h.run()
+            b.audit()
+            assert b.allocator.available == b.num_blocks
+            for req in b.done:
+                if req.uid >= ChaosHarness.JUNK_UID0:
+                    continue
+                assert req.output.tolist() == oracle[req.uid]
+
+    def test_manual_preempt_mid_speculation_exact(self, setup):
+        """Force preemption while rows hold rejected-draft cache tails:
+        recompute-resume and swap-resume must both replay the identical
+        stream (the stale tail is never part of resumable state)."""
+        reqs = _reqs(k=3, plen=20, max_new=16)
+        oracle = _outs(_run(setup, reqs, spec=None))
+        for swap in (None, 8):
+            b = _engine(setup, spec=SpecConfig(k=4),
+                        swap_break_even_tokens=swap)
+            for r in reqs:
+                b.submit(dataclasses.replace(r, prompt=r.prompt.copy(),
+                                             output=None))
+            rng = np.random.default_rng(0)
+            ticks = 0
+            while b.queue or any(s.req is not None for s in b.slots):
+                if ticks % 3 == 2:
+                    live = [i for i, s in enumerate(b.slots)
+                            if s.req is not None and s.prefill is None]
+                    if live:
+                        b.preempt_slot(int(rng.choice(live)))
+                b.step()
+                b.audit()
+                ticks += 1
+                assert ticks < 400
+            assert _outs(b) == oracle
